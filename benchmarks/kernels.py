@@ -1,0 +1,56 @@
+"""Kernel validation sweep: every Pallas kernel vs its oracle across a
+shape grid, max-abs-error reported. (Wall-time is meaningless in
+interpret mode on CPU — correctness is the deliverable here; the TPU
+perf story lives in the roofline analysis.)"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ref
+from repro.kernels.ff_dense import ff_dense
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.mamba2_ssd import mamba2_ssd
+
+
+def run():
+    key = jax.random.PRNGKey(0)
+    print("ff_dense:")
+    for M, K, N in [(64, 784, 2000), (128, 3072, 400), (256, 256, 256)]:
+        x = jax.random.normal(key, (M, K))
+        w = jax.random.normal(key, (K, N)) * K ** -0.5
+        b = jnp.zeros((N,))
+        y, g = ff_dense(x, w, b)
+        yr, gr = ref.ff_dense_ref(x, w, b)
+        err = max(float(jnp.abs(y - yr).max()),
+                  float(jnp.abs(g - gr).max() / (float(gr.max()) + 1e-9)))
+        print(f"  ({M},{K},{N}): max_err={err:.2e}")
+
+    print("flash_attention:")
+    for B, S, H, KV, hd, causal, win in [(2, 256, 8, 2, 64, True, None),
+                                         (1, 256, 4, 1, 128, True, 128),
+                                         (2, 128, 4, 4, 64, False, None)]:
+        ks = jax.random.split(key, 3)
+        q = jax.random.normal(ks[0], (B, S, H, hd))
+        k = jax.random.normal(ks[1], (B, S, KV, hd))
+        v = jax.random.normal(ks[2], (B, S, KV, hd))
+        o = flash_attention(q, k, v, causal=causal, window=win,
+                            bq=64, bk=64)
+        orf = ref.flash_attention_ref(q, k, v, causal=causal, window=win)
+        print(f"  B{B} S{S} H{H}/{KV} hd{hd} causal={causal} win={win}: "
+              f"max_err={float(jnp.abs(o - orf).max()):.2e}")
+
+    print("mamba2_ssd:")
+    for B, S, H, hd, N, chunk in [(2, 256, 8, 32, 64, 64),
+                                  (1, 512, 4, 64, 128, 128)]:
+        ks = jax.random.split(key, 4)
+        xbar = jax.random.normal(ks[0], (B, S, H, hd))
+        dA = -jax.nn.softplus(jax.random.normal(ks[1], (B, S, H)))
+        b = jax.random.normal(ks[2], (B, S, N))
+        c = jax.random.normal(ks[3], (B, S, N))
+        y, hT = mamba2_ssd(xbar, dA, b, c, chunk=chunk)
+        yr, hTr = ref.mamba2_ssd_ref(xbar, dA, b, c)
+        err = max(float(jnp.abs(y - yr).max()),
+                  float(jnp.abs(hT - hTr).max()))
+        print(f"  B{B} S{S} H{H} hd{hd} N{N} L{chunk}: max_err={err:.2e}")

@@ -1,0 +1,70 @@
+"""Roofline table builder — reads the dry-run JSONs and prints/saves the
+per-(arch x shape x mesh) three-term roofline analysis (deliverable g)."""
+from __future__ import annotations
+
+import json
+import os
+
+NOTE = {
+    "compute": "more chips / higher MXU occupancy moves this",
+    "memory": "fusion + bf16 activations cut HBM traffic",
+    "collective": "resharding or larger per-device batch cuts ICI bytes",
+}
+
+
+def load_records(dirpath="experiments/dryrun"):
+    recs = []
+    if not os.path.isdir(dirpath):
+        return recs
+    for fn in sorted(os.listdir(dirpath)):
+        if fn.endswith(".json"):
+            with open(os.path.join(dirpath, fn)) as f:
+                recs.append(json.load(f))
+    return recs
+
+
+def fmt_row(r):
+    terms = {"compute": r["compute_term_s"], "memory": r["memory_term_s"],
+             "collective": r["collective_term_s"]}
+    dom = max(terms, key=terms.get)
+    util = r.get("flops_utilization", 0.0)
+    return (f"| {r['arch']:24s} | {r['shape']:11s} "
+            f"| {'2x16x16' if r['multi_pod'] else '16x16':7s} "
+            f"| {terms['compute']:9.4f} | {terms['memory']:9.4f} "
+            f"| {terms['collective']:10.4f} | {dom:10s} | {util:5.2f} |")
+
+
+def print_table(recs, multi_pod=None):
+    print("| arch | shape | mesh | compute_s | memory_s | "
+          "collective_s | bottleneck | MF/HF |")
+    print("|---|---|---|---|---|---|---|---|")
+    for r in recs:
+        if multi_pod is not None and r["multi_pod"] != multi_pod:
+            continue
+        print(fmt_row(r))
+
+
+def main():
+    recs = load_records()
+    if not recs:
+        print("no dry-run records found — run repro.launch.dryrun first")
+        return
+    n1 = sum(1 for r in recs if not r["multi_pod"])
+    n2 = sum(1 for r in recs if r["multi_pod"])
+    print(f"# Roofline ({n1} single-pod + {n2} multi-pod records)\n")
+    print("## Single-pod (16x16 = 256 chips)")
+    print_table(recs, multi_pod=False)
+    if n2:
+        print("\n## Multi-pod (2x16x16 = 512 chips)")
+        print_table(recs, multi_pod=True)
+    # bottleneck census
+    census = {}
+    for r in recs:
+        if r["multi_pod"]:
+            continue
+        census[r["bottleneck"]] = census.get(r["bottleneck"], 0) + 1
+    print("\nbottleneck census (single-pod):", census)
+
+
+if __name__ == "__main__":
+    main()

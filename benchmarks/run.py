@@ -1,0 +1,63 @@
+"""Benchmark harness entry point: ``PYTHONPATH=src python -m benchmarks.run``.
+
+Sections (one per paper table/figure + framework-level):
+  1. paper tables 1-5 analogues (FF/PFF accuracy + schedule times)
+  2. FF vs backprop on the synthetic LM (framework substrate)
+  3. kernel validation sweep (Pallas vs oracle, interpret mode)
+  4. roofline table from the dry-run records (if present)
+
+``--full`` runs the bigger paper-table configuration; default is the
+quick profile (~10 min on this CPU container).
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+
+def main(argv):
+    full = "--full" in argv
+    only = None
+    for a in argv:
+        if a.startswith("--only="):
+            only = a.split("=", 1)[1]
+    t0 = time.time()
+
+    if only in (None, "tables"):
+        print("\n##### 1. Paper tables 1-5 analogues #####")
+        from benchmarks import paper_tables
+        paper_tables.run_tables(quick=not full)
+
+    if only in (None, "lm"):
+        print("\n##### 2. FF vs backprop on the synthetic LM #####")
+        from benchmarks import lm_ff
+        lm_ff.run()
+
+    if only in (None, "lm_schedules"):
+        print("\n##### 2b. Joint-FF vs chapter-scheduled FF (paper's "
+              "schedule on a transformer) #####")
+        from benchmarks import lm_schedules
+        lm_schedules.run()
+
+    if only in (None, "lm_negatives"):
+        print("\n##### 2c. LM negative-strategy ablation "
+              "(random/fixed/adaptive corruption) #####")
+        from benchmarks import lm_negatives
+        lm_negatives.run()
+
+    if only in (None, "kernels"):
+        print("\n##### 3. Kernel validation (Pallas interpret vs oracle) "
+              "#####")
+        from benchmarks import kernels as kbench
+        kbench.run()
+
+    if only in (None, "roofline"):
+        print("\n##### 4. Roofline (from dry-run records) #####")
+        from benchmarks import roofline
+        roofline.main()
+
+    print(f"\nbenchmarks done in {time.time() - t0:.0f}s")
+
+
+if __name__ == "__main__":
+    main(sys.argv[1:])

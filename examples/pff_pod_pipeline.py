@@ -1,0 +1,42 @@
+"""Beyond-paper example: the PFF pipeline mapped onto a (stage, data,
+model) device mesh — each stage owns a contiguous block range and
+activations flow forward via collective_permute; FF means NOTHING flows
+backward. Runs on 8 faked host devices.
+
+  PYTHONPATH=src python examples/pff_pod_pipeline.py
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro import data, optim
+from repro.configs import get_config
+from repro.core import pff_pod
+from repro.models import transformer
+
+cfg = get_config("tinyllama-1.1b").reduced()
+cfg = dataclasses.replace(cfg, num_layers=4, groups=((("attn",), 4),))
+mesh = jax.make_mesh((2, 2, 2), ("stage", "data", "model"))
+print(f"mesh: {dict(mesh.shape)} — 2 pipeline stages x 2 data x 2 model")
+
+key = jax.random.PRNGKey(0)
+params = transformer.init(key, cfg)
+opt = optim.adam_init(params)
+B, S = 8, 64
+inflight = pff_pod.init_inflight(cfg, B, S)
+step_fn = jax.jit(pff_pod.make_pff_pod_step(cfg, mesh, lr=1e-3))
+
+t0 = time.time()
+with mesh:
+    for i, tokens in enumerate(data.lm_batches(cfg.vocab, B, S, 40)):
+        params, opt, inflight, m = step_fn(
+            params, opt, {"tokens": jnp.asarray(tokens)}, inflight, i + 1)
+        if (i + 1) % 10 == 0:
+            print(f"step {i+1:3d}: stage-local FF loss "
+                  f"{float(m['loss_ff']):.4f} ({time.time()-t0:.0f}s)")
+print("pipeline ran with zero backward traffic between stages.")

@@ -1,0 +1,59 @@
+"""Checkpointing: pytree <-> .npz with path-string keys.
+
+Handles the framework's param/optimizer pytrees (nested dicts/tuples of
+arrays). Restore requires a template pytree (for structure + dtypes),
+which is how the launcher resumes: init abstract params, then load.
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _flatten(tree):
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        arr = np.asarray(leaf)
+        if arr.dtype.kind == "V" or arr.dtype.name == "bfloat16":
+            # np.savez can't persist ml_dtypes — upcast (lossless f32)
+            arr = np.asarray(jnp.asarray(leaf, jnp.float32))
+        flat[key] = arr
+    return flat
+
+
+def save(path, tree, step=None):
+    flat = _flatten(tree)
+    if step is not None:
+        flat["__step__"] = np.asarray(step)
+    tmp = path + ".tmp"
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    with open(tmp, "wb") as f:
+        np.savez(f, **flat)
+    os.replace(tmp, path)
+
+
+def restore(path, template):
+    """Returns (tree_like_template, step or None)."""
+    with np.load(path) as z:
+        data = {k: z[k] for k in z.files}
+    step = data.pop("__step__", None)
+    leaves_p = jax.tree_util.tree_flatten_with_path(template)
+    paths, treedef = leaves_p[0], leaves_p[1]
+    out = []
+    for path, leaf in paths:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        if key not in data:
+            raise KeyError(f"checkpoint missing {key}")
+        arr = data[key]
+        if tuple(arr.shape) != tuple(leaf.shape):
+            raise ValueError(f"{key}: shape {arr.shape} != {leaf.shape}")
+        # two-step conversion: numpy can't cast ml_dtypes (bf16) directly
+        out.append(jnp.asarray(arr).astype(leaf.dtype))
+    return jax.tree_util.tree_unflatten(treedef, out), (
+        int(step) if step is not None else None)

@@ -1,0 +1,175 @@
+"""Forward-Forward primitives (Hinton 2022, as used by the PFF paper).
+
+Goodness, FF losses, label embedding for image tasks, negative-sample
+strategies (AdaptiveNEG / FixedNEG / RandomNEG), negative-sequence
+corruption for LM tasks, and both prediction modes (Goodness / Softmax).
+
+Image samples follow the paper exactly: the first ``num_classes`` pixels
+of the flattened image carry a one-hot label overlay (positive = true
+label, negative = a wrong label, neutral = uniform 1/C for Softmax
+prediction).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# Goodness + loss
+# ---------------------------------------------------------------------------
+
+def goodness(y):
+    """Sum of squared activities over the feature axis (paper Eq. 1)."""
+    return jnp.sum(jnp.square(y.astype(jnp.float32)), axis=-1)
+
+
+def mean_goodness(y):
+    """Dimension-normalized goodness — scale-free across layer widths.
+
+    Used for the transformer FF losses so a single theta works for every
+    d_model; the MLP path uses the paper's raw sum (theta there follows
+    Hinton's convention).
+    """
+    return jnp.mean(jnp.square(y.astype(jnp.float32)), axis=-1)
+
+
+def ff_loss(g_pos, g_neg, theta):
+    """Paper Eq. 1: -log sigma(g_pos - theta) - log sigma(theta - g_neg).
+
+    softplus(x) = -log sigma(-x); mean over the batch.
+    """
+    return (jnp.mean(jax.nn.softplus(theta - g_pos)) +
+            jnp.mean(jax.nn.softplus(g_neg - theta)))
+
+
+def ff_loss_masked(g, is_pos, theta):
+    """Mixed pos/neg batch. g: (B, ...), is_pos: (B,) in {0., 1.}."""
+    while is_pos.ndim < g.ndim:
+        is_pos = is_pos[..., None]
+    per = jnp.where(is_pos > 0.5, jax.nn.softplus(theta - g),
+                    jax.nn.softplus(g - theta))
+    return jnp.mean(per)
+
+
+def peer_norm_loss(y, momentum_mean=None):
+    """Hinton's peer normalization: push mean activities toward their
+    average (prevents dead/hyperactive units). y: (B, D) post-ReLU."""
+    mean_act = jnp.mean(y.astype(jnp.float32), axis=0)      # (D,)
+    target = jnp.mean(mean_act)
+    return jnp.mean(jnp.square(mean_act - target))
+
+
+# ---------------------------------------------------------------------------
+# Label overlay (image tasks — paper's MNIST/CIFAR encoding)
+# ---------------------------------------------------------------------------
+
+def overlay_label(x, label, num_classes):
+    """x: (B, D) in [0,1]; label: (B,) int or (B, C) float distribution."""
+    if label.ndim == 1:
+        lab = jax.nn.one_hot(label, num_classes, dtype=x.dtype)
+    else:
+        lab = label.astype(x.dtype)
+    return jnp.concatenate([lab, x[:, num_classes:]], axis=1)
+
+
+def overlay_neutral(x, num_classes):
+    lab = jnp.full((x.shape[0], num_classes), 1.0 / num_classes, x.dtype)
+    return jnp.concatenate([lab, x[:, num_classes:]], axis=1)
+
+
+# ---------------------------------------------------------------------------
+# Negative-label strategies (image tasks)
+# ---------------------------------------------------------------------------
+
+def random_wrong_labels(key, labels, num_classes):
+    """Uniform over the C-1 wrong labels (RandomNEG / FixedNEG)."""
+    shift = jax.random.randint(key, labels.shape, 1, num_classes)
+    return (labels + shift) % num_classes
+
+
+def adaptive_wrong_labels(class_scores, labels, key=None, temp=1.0):
+    """AdaptiveNEG: pick a *confusable* wrong label from the model's
+    per-class scores (paper: 'most predicted incorrect label').
+
+    class_scores: (B, C) higher = more predicted. The true label is
+    masked out; with key=None takes the argmax (deterministic), else
+    samples proportionally to z-scored goodness (Hinton's recipe —
+    deterministic argmax collapses label diversity: every class-c image
+    gets the same wrong label forever, and the network learns label-
+    frequency shortcuts instead of image-label agreement).
+    """
+    B, C = class_scores.shape
+    masked = jnp.where(jax.nn.one_hot(labels, C, dtype=bool),
+                       -jnp.inf, class_scores)
+    if key is None:
+        return jnp.argmax(masked, axis=1).astype(labels.dtype)
+    mu = jnp.mean(class_scores, axis=1, keepdims=True)
+    sd = jnp.std(class_scores, axis=1, keepdims=True) + 1e-6
+    z = jnp.where(jnp.isfinite(masked), (masked - mu) / sd, -jnp.inf)
+    return jax.random.categorical(key, z / temp, axis=1).astype(
+        labels.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Negative sequences (LM tasks) — the paper's wrong-label overlay,
+# adapted to tokens: hybrid sequences spliced from two real sequences
+# (Hinton's hybrid-image recipe) + random token resampling.
+# ---------------------------------------------------------------------------
+
+def corrupt_tokens(key, tokens, vocab, frac=0.3, span=16):
+    """Hybrid negatives: splice spans from a batch-permuted copy, then
+    resample a small fraction of tokens uniformly.
+
+    tokens: (B, S) int32. Returns (B, S) int32 negatives.
+    """
+    B, S = tokens.shape
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    donor = tokens[jax.random.permutation(k1, B)]
+    # span mask: coarse boolean grid upsampled to S (ceil-repeat + crop)
+    n_spans = max(S // span, 1)
+    coarse = jax.random.bernoulli(k2, frac, (B, n_spans))
+    rep = -(-S // n_spans)
+    mask = jnp.repeat(coarse, rep, axis=1)[:, :S]
+    out = jnp.where(mask, donor, tokens)
+    # sprinkle uniform-random tokens (keeps negatives off-manifold)
+    resample = jax.random.bernoulli(k3, 0.05, (B, S))
+    rand_tok = jax.random.randint(k4, (B, S), 0, vocab)
+    return jnp.where(resample, rand_tok, out)
+
+
+def adaptive_corrupt_tokens(key, tokens, logits, frac=0.3, span=16):
+    """AdaptiveNEG for LM: fill corrupted spans with tokens sampled from
+    the model's own predictive distribution (self-generated negatives —
+    the closest analogue of 'most predicted incorrect label').
+
+    logits: (B, S, V) from a no-grad forward with the current weights.
+    """
+    B, S = tokens.shape
+    k1, k2 = jax.random.split(key)
+    model_tok = jax.random.categorical(k1, logits, axis=-1)   # (B, S)
+    # shift: logits at position t predict t+1
+    model_tok = jnp.concatenate([tokens[:, :1], model_tok[:, :-1]], axis=1)
+    n_spans = max(S // span, 1)
+    coarse = jax.random.bernoulli(k2, frac, (B, n_spans))
+    rep = -(-S // n_spans)
+    mask = jnp.repeat(coarse, rep, axis=1)[:, :S]
+    return jnp.where(mask, model_tok, tokens)
+
+
+# ---------------------------------------------------------------------------
+# Prediction (image tasks)
+# ---------------------------------------------------------------------------
+
+def goodness_predict(layer_goodness_fn, x, num_classes):
+    """Paper's Goodness mode: overlay each label, accumulate goodness of
+    all-but-first layers, argmax.
+
+    layer_goodness_fn(x_overlaid) -> (B,) accumulated goodness.
+    """
+    def per_class(c):
+        lab = jnp.full((x.shape[0],), c, jnp.int32)
+        return layer_goodness_fn(overlay_label(x, lab, num_classes))
+
+    scores = jax.vmap(per_class)(jnp.arange(num_classes))     # (C, B)
+    return jnp.argmax(scores.T, axis=1), scores.T

@@ -1,0 +1,284 @@
+"""The paper's network: [784, 2000, 2000, 2000, 2000] ReLU MLP trained
+with Forward-Forward, layer by layer, in chapters (splits).
+
+Faithful details:
+  * label overlay on the first C pixels (pos = true, neg = wrong label)
+  * goodness = sum of squared activities, loss = softplus(±(theta - g))
+  * activity vectors are length-normalized between layers (Hinton), so a
+    layer cannot cheat by reading its input's magnitude
+  * Adam per layer; LR cooldown after half the epochs (paper §5.1)
+  * Goodness prediction accumulates layers 2..L (all but first)
+  * Softmax head consumes normalized activations of layers 2..L and is
+    trained with layer-local backprop (it never propagates into FF layers)
+  * Performance-Optimized goodness: per-layer softmax classifier trained
+    with two-layer-deep backprop, no negative data (paper §4.4)
+
+Every chapter-level unit of work is timed; ``repro.core.pff`` replays the
+timings under the PFF schedules to derive distributed training time.
+"""
+from __future__ import annotations
+
+import functools
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import optim
+from repro.core import ff
+
+
+def _norm(x, eps=1e-8):
+    """Hinton's length normalization between FF layers."""
+    return x / (jnp.linalg.norm(x, axis=-1, keepdims=True) + eps)
+
+
+# ---------------------------------------------------------------------------
+# Params
+# ---------------------------------------------------------------------------
+
+def init(key, cfg):
+    sizes = cfg.layer_sizes
+    n_hidden = len(sizes) - 1
+    ks = jax.random.split(key, n_hidden + 1)
+    layers = []
+    for i in range(n_hidden):
+        w = jax.random.normal(ks[i], (sizes[i], sizes[i + 1]),
+                              jnp.float32) * sizes[i] ** -0.5
+        layers.append({"w": w, "b": jnp.zeros((sizes[i + 1],))})
+    # layers 2..L feed the head (all of them for a 1-hidden-layer net)
+    feat_dim = sum(sizes[2:]) or sizes[-1]
+    head = {"w": jax.random.normal(ks[-1], (feat_dim, cfg.num_classes),
+                                   jnp.float32) * feat_dim ** -0.5,
+            "b": jnp.zeros((cfg.num_classes,))}
+    params = {"layers": layers, "head": head}
+    if cfg.goodness_fn == "perf_opt":
+        kk = jax.random.split(ks[-1], n_hidden)
+        params["local_heads"] = [
+            {"w": jax.random.normal(kk[i], (sizes[i + 1], cfg.num_classes),
+                                    jnp.float32) * sizes[i + 1] ** -0.5,
+             "b": jnp.zeros((cfg.num_classes,))}
+            for i in range(n_hidden)]
+    return params
+
+
+def opt_init(params):
+    out = {"layers": [optim.adam_init(lp) for lp in params["layers"]],
+           "head": optim.adam_init(params["head"])}
+    if "local_heads" in params:
+        out["local_heads"] = [optim.adam_init(h)
+                              for h in params["local_heads"]]
+    return out
+
+
+def layer_apply(lp, x):
+    return jax.nn.relu(x @ lp["w"] + lp["b"])
+
+
+def forward_feats(layers, x):
+    """Returns list of per-layer activations (pre-normalization)."""
+    feats = []
+    h = x
+    for lp in layers:
+        h = layer_apply(lp, _norm(h))
+        feats.append(h)
+    return feats
+
+
+# ---------------------------------------------------------------------------
+# Layer-local training (one chapter = C mini-epochs over all batches)
+# ---------------------------------------------------------------------------
+
+def _ff_layer_loss(lp, xb_pos, xb_neg, theta, peer_w):
+    """FF objective. Goodness = MEAN of squared activities with theta ~ 2
+    (equivalent to the paper's sum-of-squares with theta = 2*width; the
+    mean form keeps one theta valid across layer widths)."""
+    y_pos = layer_apply(lp, xb_pos)
+    y_neg = layer_apply(lp, xb_neg)
+    loss = ff.ff_loss(ff.mean_goodness(y_pos), ff.mean_goodness(y_neg),
+                      theta)
+    if peer_w:
+        loss = loss + peer_w * ff.peer_norm_loss(y_pos)
+    return loss
+
+
+@functools.partial(jax.jit, static_argnames=("batch", "epochs", "theta",
+                                             "peer_w"))
+def train_layer_chapter(lp, opt, x_pos, x_neg, lrs, key, *, batch, epochs,
+                        theta, peer_w=0.0):
+    """Trains one layer for `epochs` mini-epochs. x_pos/x_neg are this
+    layer's (already normalized) inputs over the whole train set.
+    lrs: (epochs,) learning rate per mini-epoch (cooldown-aware)."""
+    n = x_pos.shape[0]
+    n_batches = n // batch
+
+    def epoch_body(carry, ei):
+        lp, opt, step = carry
+        perm = jax.random.permutation(jax.random.fold_in(key, ei), n)
+
+        def batch_body(carry, bi):
+            lp, opt, step = carry
+            idx = jax.lax.dynamic_slice_in_dim(perm, bi * batch, batch)
+            g = jax.grad(_ff_layer_loss)(lp, x_pos[idx], x_neg[idx],
+                                         theta, peer_w)
+            step = step + 1
+            lp, opt = optim.adam_update(lp, g, opt, lr=lrs[ei], step=step)
+            return (lp, opt, step), None
+
+        (lp, opt, step), _ = jax.lax.scan(
+            batch_body, (lp, opt, step), jnp.arange(n_batches))
+        return (lp, opt, step), None
+
+    (lp, opt, step), _ = jax.lax.scan(
+        epoch_body, (lp, opt, jnp.zeros((), jnp.int32)),
+        jnp.arange(epochs))
+    return lp, opt
+
+
+def _perf_opt_loss(lp_and_head, xb, yb):
+    lp, head = lp_and_head
+    h = layer_apply(lp, xb)
+    logits = _norm(h) @ head["w"] + head["b"]
+    return jnp.mean(
+        -jax.nn.log_softmax(logits)[jnp.arange(xb.shape[0]), yb])
+
+
+@functools.partial(jax.jit, static_argnames=("batch", "epochs"))
+def train_layer_chapter_perf_opt(lp, head, opt, opt_h, x, y, lrs, key, *,
+                                 batch, epochs):
+    """Performance-Optimized goodness (paper §4.4): train (layer, local
+    softmax head) with two-layer backprop; no negative data."""
+    n = x.shape[0]
+    n_batches = n // batch
+
+    def epoch_body(carry, ei):
+        lp, head, opt, opt_h, step = carry
+        perm = jax.random.permutation(jax.random.fold_in(key, ei), n)
+
+        def batch_body(carry, bi):
+            lp, head, opt, opt_h, step = carry
+            idx = jax.lax.dynamic_slice_in_dim(perm, bi * batch, batch)
+            g_lp, g_h = jax.grad(_perf_opt_loss)((lp, head), x[idx], y[idx])
+            step = step + 1
+            lp, opt = optim.adam_update(lp, g_lp, opt, lr=lrs[ei], step=step)
+            head, opt_h = optim.adam_update(head, g_h, opt_h, lr=lrs[ei],
+                                            step=step)
+            return (lp, head, opt, opt_h, step), None
+
+        (lp, head, opt, opt_h, step), _ = jax.lax.scan(
+            batch_body, (lp, head, opt, opt_h, step),
+            jnp.arange(n_batches))
+        return (lp, head, opt, opt_h, step), None
+
+    (lp, head, opt, opt_h, _), _ = jax.lax.scan(
+        epoch_body, (lp, head, opt, opt_h, jnp.zeros((), jnp.int32)),
+        jnp.arange(epochs))
+    return lp, head, opt, opt_h
+
+
+def _head_loss(head, feats, y):
+    logits = feats @ head["w"] + head["b"]
+    return jnp.mean(-jax.nn.log_softmax(logits)[jnp.arange(y.shape[0]), y])
+
+
+@functools.partial(jax.jit, static_argnames=("batch", "epochs"))
+def train_head_chapter(head, opt, feats, y, lrs, key, *, batch, epochs):
+    """Softmax head on concatenated normalized feats of layers 2..L."""
+    n = feats.shape[0]
+    n_batches = n // batch
+
+    def epoch_body(carry, ei):
+        head, opt, step = carry
+        perm = jax.random.permutation(jax.random.fold_in(key, ei), n)
+
+        def batch_body(carry, bi):
+            head, opt, step = carry
+            idx = jax.lax.dynamic_slice_in_dim(perm, bi * batch, batch)
+            g = jax.grad(_head_loss)(head, feats[idx], y[idx])
+            step = step + 1
+            head, opt = optim.adam_update(head, g, opt, lr=lrs[ei],
+                                          step=step)
+            return (head, opt, step), None
+
+        (head, opt, step), _ = jax.lax.scan(
+            batch_body, (head, opt, step), jnp.arange(n_batches))
+        return (head, opt, step), None
+
+    (head, opt, _), _ = jax.lax.scan(
+        epoch_body, (head, opt, jnp.zeros((), jnp.int32)),
+        jnp.arange(epochs))
+    return head, opt
+
+
+# ---------------------------------------------------------------------------
+# Prediction / evaluation
+# ---------------------------------------------------------------------------
+
+@jax.jit
+def accumulated_goodness(layers_params, x):
+    """Goodness of layers 2..L (all but first), summed. x already
+    label-overlaid. Returns (B,)."""
+    h = x
+    total = jnp.zeros((x.shape[0],), jnp.float32)
+    skip_first = len(layers_params) > 1
+    for i, lp in enumerate(layers_params):
+        h = layer_apply(lp, _norm(h))
+        if i >= 1 or not skip_first:
+            total = total + ff.mean_goodness(h)
+    return total
+
+
+def goodness_class_scores(params, x, num_classes):
+    """(B, C) accumulated-goodness score per candidate label."""
+    def per_class(c):
+        lab = jnp.full((x.shape[0],), c, jnp.int32)
+        xc = ff.overlay_label(x, lab, num_classes)
+        return accumulated_goodness(params["layers"], xc)
+    return jax.vmap(per_class)(jnp.arange(num_classes)).T
+
+
+@jax.jit
+def softmax_feats(layers_params, x):
+    """Normalized activations of layers 2..L, concatenated (all layers
+    for a 1-hidden-layer net)."""
+    feats = forward_feats(layers_params, x)
+    if len(feats) > 1:
+        feats = feats[1:]
+    return jnp.concatenate([_norm(f) for f in feats], axis=-1)
+
+
+@functools.partial(jax.jit, static_argnames=("last_only",))
+def perf_opt_scores(params, x, last_only=False):
+    """Performance-Optimized prediction (paper Table 4): sum the local
+    classifier logits over all layers, or use only the last layer's."""
+    h = x
+    total = None
+    for lp, head in zip(params["layers"], params["local_heads"]):
+        h = layer_apply(lp, _norm(h))
+        logits = jax.nn.log_softmax(_norm(h) @ head["w"] + head["b"])
+        total = logits if (total is None or last_only) else total + logits
+    return total
+
+
+def predict(params, x, num_classes, mode="goodness"):
+    if mode == "goodness":
+        scores = goodness_class_scores(params, x, num_classes)
+    elif mode in ("perf_opt_all", "perf_opt_last"):
+        xn = ff.overlay_neutral(x, num_classes)
+        scores = perf_opt_scores(params, xn,
+                                 last_only=mode == "perf_opt_last")
+    else:
+        xn = ff.overlay_neutral(x, num_classes)
+        feats = softmax_feats(params["layers"], xn)
+        scores = feats @ params["head"]["w"] + params["head"]["b"]
+    return jnp.argmax(scores, axis=1)
+
+
+def accuracy(params, x, y, num_classes, mode="goodness", chunk=2000):
+    correct = 0
+    for i in range(0, len(x), chunk):
+        pred = predict(params, jnp.asarray(x[i:i + chunk]), num_classes,
+                       mode)
+        correct += int(jnp.sum(pred == jnp.asarray(y[i:i + chunk])))
+    return correct / len(x)

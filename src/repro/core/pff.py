@@ -1,0 +1,340 @@
+"""Pipeline Forward-Forward (PFF): the paper's distributed schedules.
+
+The key observation the paper exploits: with splits, FF training is a DAG
+of chapter-tasks T(k, c) = "train layer k for C epochs in chapter c", with
+dependencies
+
+    T(k, c)  <-  T(k-1, c)   (input: layer k-1's weights after chapter c)
+    T(k, c)  <-  T(k, c-1)   (weights: layer k's own previous chapter)
+
+and NO backward edges — that is what backpropagation would add, and why
+GPipe/PipeDream have bubbles that PFF does not.
+
+Because the DAG (not the node assignment) fixes the weight-update order,
+Sequential, Single-Layer PFF and All-Layers PFF produce IDENTICAL weight
+streams — they differ only in wall-clock. We therefore (a) execute the
+canonical chapter schedule once, timing every task, and (b) replay the
+timings under each schedule's node assignment with an event-driven
+simulator to obtain distributed training time, utilization and bubble
+fraction — the quantities in the paper's Tables 1-3. Federated PFF
+additionally changes the data each chapter sees (node-local shards), so
+it is trained for real with per-node data.
+
+Node assignments (N nodes, L layers, S chapters):
+  Sequential    — one node runs everything.
+  Single-Layer  — node k owns layer k (N == L); node k must also re-run
+                  the forward pass of layers < k over the train set each
+                  chapter (the paper's Algorithm 1 lines 3-5) — this is
+                  the load imbalance that makes it slower than All-Layers.
+  All-Layers    — node i executes whole chapters c ≡ i (mod N): trains
+                  layer 1..L in order (Algorithm 2). Each node computes
+                  its own forward features while it trains, so no extra
+                  forward tasks appear.
+  Federated     — All-Layers assignment + node-local data shards.
+
+AdaptiveNEG adds a per-chapter negative-regeneration task; in Single-Layer
+the LAST node generates and publishes negatives (serializing), while in
+All-Layers/Federated each node regenerates its own (parallel) — this
+asymmetry reproduces the paper's observed Single-Layer penalty.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import data as data_lib, optim
+from repro.core import ff, ff_mlp
+
+
+# ---------------------------------------------------------------------------
+# Canonical chapter-schedule trainer (times every task)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class TaskRecord:
+    kind: str                  # train | forward | neg_gen | head | publish
+    layer: int                 # -1 for non-layer tasks
+    chapter: int
+    duration: float
+
+
+@dataclasses.dataclass
+class TrainResult:
+    params: dict
+    records: List[TaskRecord]
+    test_acc: float
+    train_acc: float
+    cfg: object
+    history: List[Tuple[int, float]]       # (chapter, test_acc) probes
+
+
+def _make_negatives(key, cfg, params, x, y, mode, class_scores=None):
+    """Returns negative-overlaid images (N, D)."""
+    if mode == "adaptive" and class_scores is not None:
+        neg_labels = ff.adaptive_wrong_labels(class_scores, y, key=key)
+    else:
+        neg_labels = ff.random_wrong_labels(key, y, cfg.num_classes)
+    return ff.overlay_label(x, neg_labels, cfg.num_classes)
+
+
+def train_ff_mlp(cfg, task: data_lib.ImageTask, *, probe_every=0,
+                 node_data: Optional[List[np.ndarray]] = None,
+                 num_nodes: int = 1, verbose=False) -> TrainResult:
+    """Runs the canonical chapter schedule of the paper.
+
+    node_data: optional list of per-node index arrays (Federated PFF) —
+    chapter c uses node (c % num_nodes)'s shard.
+    """
+    key = jax.random.PRNGKey(cfg.seed)
+    params = ff_mlp.init(key, cfg)
+    opt = ff_mlp.opt_init(params)
+    records: List[TaskRecord] = []
+    history = []
+
+    S = cfg.splits
+    C = max(cfg.epochs // cfg.splits, 1)
+    n_layers = len(params["layers"])
+    x_all = jnp.asarray(task.x_train)
+    y_all = jnp.asarray(task.y_train)
+    perf_opt = cfg.goodness_fn == "perf_opt"
+
+    # initial negatives
+    kneg = jax.random.fold_in(key, 999)
+    if not perf_opt:
+        x_pos_base = ff.overlay_label(x_all, y_all, cfg.num_classes)
+        x_neg_base = _make_negatives(kneg, cfg, params, x_all, y_all,
+                                     "random")
+
+    for chapter in range(S):
+        if node_data is not None:
+            idx = jnp.asarray(node_data[chapter % num_nodes])
+        else:
+            idx = None
+        # learning-rate for this chapter's mini-epochs
+        lrs = jnp.asarray([
+            optim.cooldown_lr(cfg.lr_ff, chapter * C + e, cfg.epochs,
+                              cfg.cooldown_after) for e in range(C)],
+            jnp.float32)
+        lrs_head = lrs * (cfg.lr_softmax / cfg.lr_ff)
+        kc = jax.random.fold_in(key, chapter)
+
+        if perf_opt:
+            x_in = x_all if idx is None else x_all[idx]
+            y_in = y_all if idx is None else y_all[idx]
+            x_in = ff.overlay_neutral(x_in, cfg.num_classes)
+            for k in range(n_layers):
+                t0 = time.perf_counter()
+                xk = ff_mlp._norm(x_in)
+                lp, lh, o, oh = ff_mlp.train_layer_chapter_perf_opt(
+                    params["layers"][k], params["local_heads"][k],
+                    opt["layers"][k], opt["local_heads"][k],
+                    xk, y_in, lrs, jax.random.fold_in(kc, k),
+                    batch=cfg.batch_size, epochs=C)
+                jax.block_until_ready(lp)
+                params["layers"][k] = lp
+                params["local_heads"][k] = lh
+                opt["layers"][k], opt["local_heads"][k] = o, oh
+                x_in = ff_mlp.layer_apply(lp, ff_mlp._norm(x_in))
+                records.append(TaskRecord(
+                    "train", k, chapter, time.perf_counter() - t0))
+        else:
+            x_pos = x_pos_base if idx is None else x_pos_base[idx]
+            x_neg = x_neg_base if idx is None else x_neg_base[idx]
+            for k in range(n_layers):
+                t0 = time.perf_counter()
+                xp, xn = ff_mlp._norm(x_pos), ff_mlp._norm(x_neg)
+                lp, o = ff_mlp.train_layer_chapter(
+                    params["layers"][k], opt["layers"][k], xp, xn, lrs,
+                    jax.random.fold_in(kc, k), batch=cfg.batch_size,
+                    epochs=C, theta=cfg.theta, peer_w=cfg.peer_w)
+                jax.block_until_ready(lp)
+                params["layers"][k] = lp
+                opt["layers"][k] = o
+                # propagate data through the freshly-trained layer
+                x_pos = ff_mlp.layer_apply(lp, xp)
+                x_neg = ff_mlp.layer_apply(lp, xn)
+                records.append(TaskRecord(
+                    "train", k, chapter, time.perf_counter() - t0))
+
+        # softmax head (trained alongside, layer-local — paper §3)
+        if cfg.classifier == "softmax":
+            t0 = time.perf_counter()
+            xn_all = ff.overlay_neutral(
+                x_all if idx is None else x_all[idx], cfg.num_classes)
+            feats = ff_mlp.softmax_feats(params["layers"], xn_all)
+            params["head"], opt["head"] = ff_mlp.train_head_chapter(
+                params["head"], opt["head"], feats,
+                y_all if idx is None else y_all[idx],
+                lrs_head, jax.random.fold_in(kc, 77),
+                batch=cfg.batch_size, epochs=C)
+            jax.block_until_ready(params["head"]["w"])
+            records.append(TaskRecord(
+                "head", n_layers, chapter, time.perf_counter() - t0))
+
+        # negative regeneration (UpdateXNEG)
+        if not perf_opt and cfg.neg_mode in ("adaptive", "random"):
+            t0 = time.perf_counter()
+            scores = None
+            if cfg.neg_mode == "adaptive":
+                scores = _class_scores_chunked(params, x_all, cfg)
+            x_neg_base = _make_negatives(
+                jax.random.fold_in(kneg, chapter), cfg, params,
+                x_all, y_all, cfg.neg_mode, scores)
+            jax.block_until_ready(x_neg_base)
+            records.append(TaskRecord(
+                "neg_gen", -1, chapter, time.perf_counter() - t0))
+
+        if probe_every and (chapter + 1) % probe_every == 0:
+            acc = ff_mlp.accuracy(params, task.x_test, task.y_test,
+                                  cfg.num_classes, cfg.classifier)
+            history.append((chapter + 1, acc))
+            if verbose:
+                print(f"  chapter {chapter + 1}/{S}: test acc {acc:.4f}")
+
+    mode = "perf_opt_all" if perf_opt else cfg.classifier
+    test_acc = ff_mlp.accuracy(params, task.x_test, task.y_test,
+                               cfg.num_classes, mode)
+    train_acc = ff_mlp.accuracy(params, task.x_train[:2000],
+                                task.y_train[:2000], cfg.num_classes, mode)
+    return TrainResult(params, records, test_acc, train_acc, cfg, history)
+
+
+def _class_scores_chunked(params, x, cfg, chunk=2000):
+    outs = []
+    for i in range(0, x.shape[0], chunk):
+        outs.append(ff_mlp.goodness_class_scores(
+            params, x[i:i + chunk], cfg.num_classes))
+    return jnp.concatenate(outs, axis=0)
+
+
+# ---------------------------------------------------------------------------
+# Event-driven schedule simulator
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class SimResult:
+    schedule: str
+    num_nodes: int
+    makespan: float
+    sequential_time: float
+    speedup: float
+    utilization: float
+    bubble_fraction: float
+    node_busy: List[float]
+
+
+def _avg_durations(records: List[TaskRecord]):
+    """Mean duration per (kind, layer) — smooths jit-compile outliers."""
+    acc: Dict[Tuple[str, int], List[float]] = {}
+    for r in records:
+        acc.setdefault((r.kind, r.layer), []).append(r.duration)
+    return {k: float(np.median(v)) for k, v in acc.items()}
+
+
+def simulate_schedule(records: List[TaskRecord], schedule: str,
+                      num_nodes: int, *, comm_time: float = 0.0,
+                      forward_frac: float = 0.18) -> SimResult:
+    """Replays the task DAG under a node assignment.
+
+    forward_frac: cost of re-running the forward pass of ONE layer over
+    the train set, as a fraction of one train-task (used by Single-Layer,
+    Algorithm 1 lines 3-5; measured ratio fwd/train ≈ C * this).
+    """
+    dur = _avg_durations(records)
+    layers = sorted({r.layer for r in records if r.kind == "train"})
+    chapters = sorted({r.chapter for r in records if r.kind == "train"})
+    L, S = len(layers), len(chapters)
+    has_head = any(k == "head" for k, _ in dur)
+    has_neg = any(k == "neg_gen" for k, _ in dur)
+
+    t_train = {k: dur[("train", k)] for k in layers}
+    t_head = dur.get(("head", L), 0.0)
+    t_neg = dur.get(("neg_gen", -1), 0.0)
+    # fair sequential baseline: same median task costs, one node
+    seq_total = S * (sum(t_train.values()) + (t_head if has_head else 0.0)
+                     + (t_neg if has_neg else 0.0))
+
+    # ---- node assignment -------------------------------------------------
+    def node_of(layer, chapter):
+        if schedule == "sequential" or num_nodes == 1:
+            return 0
+        if schedule == "single_layer":
+            return layer % num_nodes
+        # all_layers / federated: node per chapter
+        return chapter % num_nodes
+
+    # ---- event simulation --------------------------------------------------
+    node_free = [0.0] * num_nodes
+    node_busy = [0.0] * num_nodes
+    done: Dict[Tuple[str, int, int], float] = {}
+
+    for c in range(S):
+        for k in layers:
+            n = node_of(k, c)
+            deps = []
+            if k > 0:
+                deps.append(done[("train", k - 1, c)] +
+                            (comm_time if node_of(k - 1, c) != n else 0.0))
+            if c > 0:
+                deps.append(done[("train", k, c - 1)] +
+                            (comm_time if node_of(k, c - 1) != n else 0.0))
+            # Negatives are used at whatever freshness is available
+            # ("UpdateXNEG(publish=False)", regenerated per node): they do
+            # NOT gate the chapter start — their cost appears as node busy
+            # time below. This matches the paper's All-Layers AdaptiveNEG
+            # behaviour (each node regenerates its own after each chapter).
+            extra = 0.0
+            if schedule == "single_layer" and k > 0:
+                # re-forward layers < k over the train set (Algorithm 1)
+                extra = forward_frac * sum(t_train[j] for j in range(k))
+            start = max([node_free[n]] + deps)
+            end = start + extra + t_train[k]
+            node_free[n] = end
+            node_busy[n] += extra + t_train[k]
+            done[("train", k, c)] = end
+
+        if has_head:
+            # head trains on the node that ran the chapter's last layer
+            n = node_of(L - 1, c)
+            start = max(node_free[n], done[("train", L - 1, c)])
+            end = start + t_head
+            node_free[n] = end
+            node_busy[n] += t_head
+            done[("head", L, c)] = end
+
+        if has_neg:
+            if schedule == "single_layer":
+                # the LAST node generates+publishes for everyone (paper)
+                n = num_nodes - 1
+            else:
+                # the node that just finished chapter c regenerates its own
+                n = node_of(0, c)
+            start = max(node_free[n], done[("train", L - 1, c)])
+            end = start + t_neg
+            node_free[n] = end
+            node_busy[n] += t_neg
+            done[("neg_gen", -1, c)] = end
+
+    makespan = max(node_free)
+    speedup = seq_total / makespan if makespan > 0 else 1.0
+    util = sum(node_busy) / (num_nodes * makespan) if makespan else 1.0
+    return SimResult(schedule, num_nodes, makespan, seq_total, speedup,
+                     util, 1.0 - util, node_busy)
+
+
+# ---------------------------------------------------------------------------
+# Federated PFF (actually trains on node-local shards)
+# ---------------------------------------------------------------------------
+
+def train_federated(cfg, task: data_lib.ImageTask, num_nodes: int,
+                    **kw) -> TrainResult:
+    rng = np.random.default_rng(cfg.seed)
+    order = rng.permutation(len(task.x_train))
+    shards = [order[i::num_nodes] for i in range(num_nodes)]
+    return train_ff_mlp(cfg, task, node_data=shards, num_nodes=num_nodes,
+                        **kw)

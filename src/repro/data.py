@@ -1,0 +1,139 @@
+"""Synthetic data pipelines (container is offline — no real MNIST/CIFAR).
+
+Image tasks: deterministic class-prototype generators. Each class has a
+smooth random prototype; samples are ``clip(proto + noise)``. ``mnist_like``
+is close to linearly separable (98%+ reachable, like MNIST); ``cifar_like``
+uses heavier noise + class-overlapping prototypes (much harder, mimicking
+the paper's CIFAR-10 gap).
+
+LM task: a random first-order Markov chain over the vocabulary with a
+Zipf-ish stationary marginal — gives next-token structure a model can
+learn (CE well below uniform) while being fully deterministic.
+
+All generators are pure functions of (seed, split) — every node in a
+distributed/federated run regenerates its shard without communication.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# Image classification (paper's setting)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ImageTask:
+    x_train: np.ndarray      # (N, D) float32 in [0, 1]
+    y_train: np.ndarray      # (N,) int32
+    x_test: np.ndarray
+    y_test: np.ndarray
+    num_classes: int
+    dim: int
+
+
+def _smooth_noise(rng, n, side, ch, scale):
+    """Low-frequency noise: upsampled coarse grid (structured, image-like)."""
+    coarse = rng.normal(size=(n, ch, side // 4, side // 4)) * scale
+    up = coarse.repeat(4, axis=2).repeat(4, axis=3)
+    return up.reshape(n, -1)
+
+
+def _make_image_task(seed, n_train, n_test, side, ch, num_classes,
+                     proto_scale, noise_scale, overlap, max_shift=3):
+    rng = np.random.default_rng(seed)
+    dim = side * side * ch
+    # smooth prototypes (blob-like, so pixels are spatially correlated)
+    protos = _smooth_noise(rng, num_classes, side, ch, proto_scale)
+    if overlap:
+        # mix prototypes so classes share structure (harder task)
+        mix = rng.dirichlet(np.ones(num_classes) * 0.4, size=num_classes)
+        protos = mix @ protos
+    protos_img = protos.reshape(num_classes, ch, side, side)
+
+    def sample(n, rng):
+        y = rng.integers(0, num_classes, size=n).astype(np.int32)
+        x = protos_img[y]
+        if max_shift:
+            # translation jitter (MNIST-style position variance) — breaks
+            # linear separability while MLPs cope fine
+            dx = rng.integers(-max_shift, max_shift + 1, size=n)
+            dy = rng.integers(-max_shift, max_shift + 1, size=n)
+            x = np.stack([np.roll(np.roll(im, a, axis=1), b, axis=2)
+                          for im, a, b in zip(x, dx, dy)])
+        x = x.reshape(n, dim)
+        x = x + _smooth_noise(rng, n, side, ch, noise_scale)
+        x = x + rng.normal(size=(n, dim)) * noise_scale * 0.5
+        x = 1.0 / (1.0 + np.exp(-x))                     # into [0, 1]
+        return x.astype(np.float32), y
+
+    x_tr, y_tr = sample(n_train, rng)
+    x_te, y_te = sample(n_test, rng)
+    return ImageTask(x_tr, y_tr, x_te, y_te, num_classes, dim)
+
+
+def mnist_like(seed=0, n_train=6000, n_test=1000):
+    """28x28x1, 10 classes, separable but not linearly (MNIST stand-in)."""
+    return _make_image_task(seed, n_train, n_test, side=28, ch=1,
+                            num_classes=10, proto_scale=2.0,
+                            noise_scale=0.8, overlap=False, max_shift=4)
+
+
+def cifar_like(seed=0, n_train=6000, n_test=1000):
+    """32x32x3, 10 classes, overlapping prototypes + heavy noise."""
+    return _make_image_task(seed + 7, n_train, n_test, side=32, ch=3,
+                            num_classes=10, proto_scale=1.0,
+                            noise_scale=0.9, overlap=True, max_shift=3)
+
+
+def shard_task(task: ImageTask, node: int, num_nodes: int) -> ImageTask:
+    """Federated split: node-local training shard, shared test set."""
+    idx = np.arange(node, len(task.x_train), num_nodes)
+    return dataclasses.replace(task, x_train=task.x_train[idx],
+                               y_train=task.y_train[idx])
+
+
+def batches(x, y, batch_size, seed):
+    """Shuffled minibatch index iterator (one epoch)."""
+    rng = np.random.default_rng(seed)
+    order = rng.permutation(len(x))
+    for i in range(0, len(x) - batch_size + 1, batch_size):
+        j = order[i:i + batch_size]
+        yield x[j], y[j]
+
+
+# ---------------------------------------------------------------------------
+# Language modelling (synthetic Markov corpus)
+# ---------------------------------------------------------------------------
+
+class MarkovLM:
+    """First-order Markov chain with sparse transitions + Zipf marginal."""
+
+    def __init__(self, vocab, seed=0, branching=32):
+        rng = np.random.default_rng(seed)
+        self.vocab = vocab
+        self.branching = branching
+        # each token can transition to `branching` successors
+        self.succ = rng.integers(0, vocab, size=(vocab, branching))
+        w = rng.pareto(1.2, size=(vocab, branching)) + 0.05
+        self.probs = (w / w.sum(1, keepdims=True)).astype(np.float64)
+
+    def sample(self, batch, seq_len, seed):
+        rng = np.random.default_rng(seed)
+        out = np.empty((batch, seq_len), np.int32)
+        tok = rng.integers(0, self.vocab, size=batch)
+        for t in range(seq_len):
+            out[:, t] = tok
+            choice = np.array(
+                [rng.choice(self.branching, p=self.probs[k]) for k in tok])
+            tok = self.succ[tok, choice]
+        return out
+
+
+def lm_batches(vocab, batch, seq_len, steps, seed=0):
+    """Yields (batch, seq_len + 1) int32 token blocks for `steps` steps."""
+    chain = MarkovLM(min(vocab, 4096), seed)
+    for s in range(steps):
+        yield chain.sample(batch, seq_len + 1, seed * 100003 + s) % vocab

@@ -1,0 +1,15 @@
+"""TPU Pallas kernels for the compute hot-spots.
+
+  ff_dense        — the FF-MLP hot loop: fused matmul -> ReLU -> goodness
+                    (one pass computes the layer output AND the per-row
+                    sum-of-squares the FF loss needs).
+  flash_attention — blockwise online-softmax attention (GQA / causal /
+                    sliding-window) for the transformer archs.
+  mamba2_ssd      — chunked SSD dual-form scan (intra-chunk quadratic +
+                    carried state) for Mamba-2.
+
+Each kernel ships as <name>.py (pl.pallas_call + BlockSpec), ops.py
+(jit'd dispatch wrapper), ref.py (pure-jnp oracle). On CPU the kernels
+run under interpret=True; the model code calls the pure-JAX paths by
+default and the kernels are validated against them in tests/.
+"""

@@ -1,0 +1,105 @@
+"""Blockwise online-softmax attention (flash-style) Pallas kernel.
+
+Supports GQA (H = G * KV query heads share KV heads), causal masking and
+sliding-window. Layout decisions for TPU:
+
+  * grid = (B, H, nq, nk) with nk innermost — for a fixed (b, h, iq) the
+    kv blocks stream through VMEM while the (bq, hd) accumulator and the
+    (bq,) running max / sum live in VMEM scratch across nk steps.
+  * q is loaded once per (b, h, iq) and multiplied by 1/sqrt(hd) in f32.
+  * the MXU sees (bq, hd) x (hd, bk) for scores and (bq, bk) x (bk, hd)
+    for the PV product; both tiles are 128-aligned by default.
+  * causal + window masking is done in-kernel via block-position iota;
+    fully-masked blocks still execute (interpret-mode correctness first;
+    on real TPU the index_map would skip them — noted in DESIGN.md).
+
+The KV-head index for GQA is derived in the index_map: kv = h // G.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+            causal, window, bq, bk, nk, scale):
+    ik = pl.program_id(3)
+    iq = pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr[...], NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr[...])
+        acc_scr[...] = jnp.zeros_like(acc_scr[...])
+
+    q = q_ref[0, :, 0, :].astype(jnp.float32) * scale      # (bq, hd)
+    k = k_ref[0, :, 0, :].astype(jnp.float32)              # (bk, hd)
+    v = v_ref[0, :, 0, :].astype(jnp.float32)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())))  # (bq, bk)
+
+    q_pos = iq * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+    k_pos = ik * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    mask = jnp.ones((bq, bk), jnp.bool_)
+    if causal:
+        mask &= q_pos >= k_pos
+    if window is not None:
+        mask &= (q_pos - k_pos) < window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=1))
+    p = jnp.exp(s - m_new[:, None])
+    corr = jnp.exp(m_prev - m_new)
+    l_scr[...] = l_scr[...] * corr + p.sum(axis=1)
+    acc_scr[...] = acc_scr[...] * corr[:, None] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())))
+    m_scr[...] = m_new
+
+    @pl.when(ik == nk - 1)
+    def _finish():
+        l = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0, :, 0, :] = (acc_scr[...] / l[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "bq",
+                                             "bk", "interpret"))
+def flash_attention(q, k, v, *, causal=True, window=None, bq=128, bk=128,
+                    interpret=True):
+    """q: (B, Sq, H, hd); k, v: (B, Sk, KV, hd) -> (B, Sq, H, hd)."""
+    B, Sq, H, hd = q.shape
+    _, Sk, KV, _ = k.shape
+    G = H // KV
+    bq = min(bq, Sq)
+    bk = min(bk, Sk)
+    assert Sq % bq == 0 and Sk % bk == 0, (Sq, bq, Sk, bk)
+    nq, nk = Sq // bq, Sk // bk
+
+    kernel = functools.partial(
+        _kernel, causal=causal, window=window, bq=bq, bk=bk, nk=nk,
+        scale=hd ** -0.5)
+    return pl.pallas_call(
+        kernel,
+        grid=(B, H, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, bq, 1, hd), lambda b, h, iq, ik: (b, iq, h, 0)),
+            pl.BlockSpec((1, bk, 1, hd),
+                         lambda b, h, iq, ik: (b, ik, h // G, 0)),
+            pl.BlockSpec((1, bk, 1, hd),
+                         lambda b, h, iq, ik: (b, ik, h // G, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, 1, hd),
+                               lambda b, h, iq, ik: (b, iq, h, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Sq, H, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq,), jnp.float32),          # running max
+            pltpu.VMEM((bq,), jnp.float32),          # running sum
+            pltpu.VMEM((bq, hd), jnp.float32),       # output accumulator
+        ],
+        interpret=interpret,
+    )(q, k, v)

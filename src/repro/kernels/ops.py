@@ -1,0 +1,39 @@
+"""Dispatch layer: TPU -> Pallas kernel, anything else -> jnp oracle.
+
+Model code imports from here; tests cross-validate both paths. On this
+CPU container the Pallas path runs in interpret mode (set
+``force_pallas=True``); on a real TPU it compiles to Mosaic.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels import ref
+from repro.kernels.ff_dense import ff_dense as _ff_dense_pallas
+from repro.kernels.flash_attention import flash_attention as _flash_pallas
+from repro.kernels.mamba2_ssd import mamba2_ssd as _ssd_pallas
+
+
+def _on_tpu():
+    return jax.default_backend() == "tpu"
+
+
+def ff_dense(x, w, b, *, force_pallas=False):
+    if _on_tpu() or force_pallas:
+        return _ff_dense_pallas(x, w, b, interpret=not _on_tpu())
+    return ref.ff_dense_ref(x, w, b)
+
+
+def flash_attention(q, k, v, *, causal=True, window=None,
+                    force_pallas=False):
+    if _on_tpu() or force_pallas:
+        return _flash_pallas(q, k, v, causal=causal, window=window,
+                             interpret=not _on_tpu())
+    return ref.flash_attention_ref(q, k, v, causal=causal, window=window)
+
+
+def mamba2_ssd(xbar, dA, b, c, *, chunk=128, force_pallas=False):
+    if _on_tpu() or force_pallas:
+        return _ssd_pallas(xbar, dA, b, c, chunk=chunk,
+                           interpret=not _on_tpu())
+    return ref.mamba2_ssd_ref(xbar, dA, b, c)

@@ -1,0 +1,61 @@
+"""Pure-jnp oracles for every kernel in this package."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ff_dense_ref(x, w, b):
+    y = jnp.maximum(
+        jnp.dot(x, w, preferred_element_type=jnp.float32)
+        + b.astype(jnp.float32)[None, :], 0.0)
+    g = jnp.sum(y * y, axis=1)
+    return y.astype(x.dtype), g
+
+
+def flash_attention_ref(q, k, v, *, causal=True, window=None):
+    """q: (B, Sq, H, hd); k, v: (B, Sk, KV, hd). Dense reference."""
+    B, Sq, H, hd = q.shape
+    _, Sk, KV, _ = k.shape
+    G = H // KV
+    qf = q.astype(jnp.float32) * hd ** -0.5
+    qf = qf.reshape(B, Sq, KV, G, hd)
+    s = jnp.einsum("bikgd,bjkd->bkgij", qf, k.astype(jnp.float32))
+    qpos = jnp.arange(Sq)[:, None]
+    kpos = jnp.arange(Sk)[None, :]
+    m = jnp.ones((Sq, Sk), bool)
+    if causal:
+        m &= qpos >= kpos
+    if window is not None:
+        m &= (qpos - kpos) < window
+    s = jnp.where(m[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgij,bjkd->bikgd", p, v.astype(jnp.float32))
+    return o.reshape(B, Sq, H, hd).astype(q.dtype)
+
+
+def mamba2_ssd_ref(xbar, dA, b, c, h0=None):
+    """Sequential (token-by-token) SSD recurrence — the ground truth.
+
+    xbar: (B, S, H, hd) = x * dt; dA: (B, S, H) = dt * A (negative);
+    b, c: (B, S, N). Returns y: (B, S, H, hd), hT: (B, H, hd, N).
+    """
+    B, S, H, hd = xbar.shape
+    N = b.shape[-1]
+    f32 = jnp.float32
+
+    def step(h, inp):
+        xb_t, dA_t, b_t, c_t = inp
+        h = h * jnp.exp(dA_t)[..., None, None] + jnp.einsum(
+            "bhd,bn->bhdn", xb_t, b_t)
+        y = jnp.einsum("bn,bhdn->bhd", c_t, h)
+        return h, y
+
+    h0 = jnp.zeros((B, H, hd, N), f32) if h0 is None else h0.astype(f32)
+    hT, ys = jax.lax.scan(
+        step, h0,
+        (xbar.astype(f32).transpose(1, 0, 2, 3),
+         dA.astype(f32).transpose(1, 0, 2),
+         b.astype(f32).transpose(1, 0, 2),
+         c.astype(f32).transpose(1, 0, 2)))
+    return ys.transpose(1, 0, 2, 3), hT

@@ -1,0 +1,284 @@
+"""Static analyzer for optimized (post-SPMD) HLO text.
+
+XLA's ``compiled.cost_analysis()`` on the CPU backend counts every
+computation ONCE — ``lax.scan``-generated while loops are not multiplied
+by their trip count, which under-counts our layer-stacked models by the
+layer count. This module re-derives the roofline quantities from the HLO
+text itself:
+
+  flops       — 2*M*N*K summed over every ``dot`` (MXU flops; elementwise
+                flops are ignored, as in standard roofline practice),
+                weighted by the product of enclosing while-loop trip
+                counts.
+  bytes       — HBM traffic model: for every top-level op in non-fusion
+                computations, output bytes + operand bytes (a fusion node
+                counts only its boundary IO — its internals live in
+                VMEM/registers, exactly what post-fusion HBM traffic
+                means), weighted by trip counts.
+  collectives — result-shape bytes per collective type, trip-weighted
+                (the per-device program's view).
+
+Trip counts come from the largest integer constant in each while's
+condition computation — exact for scan-generated loops.
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict, List, Tuple
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "f16": 2, "bf16": 2, "s64": 8,
+                "s32": 4, "s16": 2, "s8": 1, "u64": 8, "u32": 4,
+                "u16": 2, "u8": 1, "pred": 1, "c64": 8, "c128": 16}
+
+_SHAPE_RE = re.compile(
+    r"(f64|f32|f16|bf16|s64|s32|s16|s8|u64|u32|u16|u8|pred|c64|c128)"
+    r"\[([\d,]*)\]")
+
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(.+)$")
+_COMP_RE = re.compile(r"^(ENTRY\s+)?%?([\w\.\-]+)\s*\(.*\)\s*->\s*.+\{\s*$")
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+
+def _parse_shapes(text):
+    """All (dtype, dims) shapes in a type string (handles tuples)."""
+    out = []
+    for dt, dims in _SHAPE_RE.findall(text):
+        shape = tuple(int(d) for d in dims.split(",") if d)
+        out.append((dt, shape))
+    return out
+
+
+def _nbytes(shapes):
+    total = 0
+    for dt, shape in shapes:
+        n = 1
+        for d in shape:
+            n *= d
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+class HloModule:
+    def __init__(self, text: str):
+        self.comps: Dict[str, List[str]] = {}
+        self.entry = None
+        cur = None
+        for line in text.splitlines():
+            m = _COMP_RE.match(line)
+            if m:
+                cur = m.group(2)
+                self.comps[cur] = []
+                if m.group(1):
+                    self.entry = cur
+            elif cur is not None and line.strip() and line.strip() != "}":
+                self.comps[cur].append(line)
+        if self.entry is None:      # fall back: last computation
+            self.entry = list(self.comps)[-1] if self.comps else None
+        # symbol tables per computation: var -> type string
+        self.symbols: Dict[str, Dict[str, str]] = {}
+        for cname, lines in self.comps.items():
+            tbl = {}
+            for line in lines:
+                dm = _DEF_RE.match(line)
+                if dm:
+                    var, rhs = dm.group(1), dm.group(2)
+                    # type = everything before the opcode name
+                    tm = re.match(r"((?:\([^)]*\)|[\w\[\],\s{}:#*]+?))\s+"
+                                  r"([\w\-]+)\(", rhs)
+                    if tm:
+                        tbl[var] = tm.group(1)
+            # parameters: "%p = f32[..] parameter(0)" handled above
+            self.symbols[cname] = tbl
+        self._weights = self._compute_weights()
+        self._fusion_bodies = self._find_fusion_bodies()
+
+    # -- call graph -------------------------------------------------------
+    def _compute_weights(self):
+        weights = {c: 0 for c in self.comps}
+        if self.entry is None:
+            return weights
+        weights[self.entry] = 1
+        # iterate to fixpoint (call graph is a DAG; few passes suffice)
+        for _ in range(12):
+            changed = False
+            for cname, lines in self.comps.items():
+                w = weights.get(cname, 0)
+                if w == 0:
+                    continue
+                for line in lines:
+                    # while loops
+                    wm = re.search(r"while\(.*?\).*?condition=%?"
+                                   r"([\w\.\-]+),\s*body=%?([\w\.\-]+)",
+                                   line)
+                    if wm:
+                        cond, body = wm.groups()
+                        tm = re.search(
+                            r'known_trip_count[":{\s]*[n":\s]*(\d+)', line)
+                        trip = (int(tm.group(1)) if tm
+                                else self._trip_count(cond))
+                        for tgt, mult in ((cond, trip), (body, trip)):
+                            nw = w * mult
+                            if nw > weights.get(tgt, 0):
+                                weights[tgt] = nw
+                                changed = True
+                        continue
+                    # fusion / call / reducers / conditionals
+                    for attr in ("calls", "to_apply"):
+                        fm = re.search(attr + r"=%?([\w\.\-]+)", line)
+                        if fm:
+                            tgt = fm.group(1)
+                            if w > weights.get(tgt, 0):
+                                weights[tgt] = w
+                                changed = True
+                    cm = re.search(r"branch_computations=\{([^}]*)\}", line)
+                    if cm:
+                        for tgt in re.findall(r"%?([\w\.\-]+)",
+                                              cm.group(1)):
+                            if w > weights.get(tgt, 0):
+                                weights[tgt] = w
+                                changed = True
+            if not changed:
+                break
+        return weights
+
+    def _trip_count(self, cond_name):
+        best = 1
+        for line in self.comps.get(cond_name, ()):
+            for c in re.findall(r"constant\((\d+)\)", line):
+                best = max(best, int(c))
+        return best
+
+    def _find_fusion_bodies(self):
+        bodies = set()
+        for lines in self.comps.values():
+            for line in lines:
+                if re.search(r"\bfusion\(", line):
+                    fm = re.search(r"calls=%?([\w\.\-]+)", line)
+                    if fm:
+                        bodies.add(fm.group(1))
+                for attr in ("to_apply",):
+                    fm = re.search(attr + r"=%?([\w\.\-]+)", line)
+                    if fm:
+                        bodies.add(fm.group(1))   # reducers: skip for bytes
+        return bodies
+
+    # -- queries ------------------------------------------------------------
+    def _operand_vars(self, line):
+        call = line.split("(", 1)
+        if len(call) < 2:
+            return []
+        args = call[1].split(")", 1)[0]
+        return re.findall(r"%([\w\.\-]+)", args)
+
+    def flops(self):
+        """Trip-weighted dot flops (everywhere, incl. fusion bodies)."""
+        total = 0.0
+        for cname, lines in self.comps.items():
+            w = self._weights.get(cname, 0)
+            if w == 0:
+                continue
+            tbl = self.symbols[cname]
+            for line in lines:
+                if not re.search(r"=\s*[^=]*\bdot\(", line):
+                    continue
+                dm = _DEF_RE.match(line)
+                if not dm:
+                    continue
+                out_shapes = _parse_shapes(dm.group(2).split("dot(")[0])
+                if not out_shapes:
+                    continue
+                out_elems = 1
+                for d in out_shapes[0][1]:
+                    out_elems *= d
+                # contracted dims from lhs
+                ops = self._operand_vars(line)
+                lhs_type = tbl.get(ops[0], "") if ops else ""
+                lhs_shapes = _parse_shapes(lhs_type)
+                cm = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", line)
+                k = 1
+                if cm and lhs_shapes:
+                    for d in cm.group(1).split(","):
+                        if d:
+                            k *= lhs_shapes[0][1][int(d)]
+                total += w * 2.0 * out_elems * k
+        return total
+
+    def bytes_accessed(self):
+        """Trip-weighted boundary IO of top-level ops (HBM traffic model).
+
+        In-place ops are credited as such (XLA:TPU updates buffers in
+        place): dynamic-update-slice counts 2x the UPDATE bytes (read +
+        write of the touched region, not the whole buffer);
+        dynamic-slice counts 2x the result bytes.
+        """
+        total = 0.0
+        skip_ops = ("parameter", "constant", "get-tuple-element", "tuple",
+                    "bitcast", "while", "conditional")
+        for cname, lines in self.comps.items():
+            w = self._weights.get(cname, 0)
+            if w == 0 or cname in self._fusion_bodies:
+                continue
+            tbl = self.symbols[cname]
+            for line in lines:
+                dm = _DEF_RE.match(line)
+                if not dm:
+                    continue
+                rhs = dm.group(2)
+                om = re.match(r"(?:\([^)]*\)|[\w\[\],\s{}:#*]+?)\s+"
+                              r"([\w\-]+)\(", rhs)
+                if not om:
+                    continue
+                op = om.group(1)
+                if op in skip_ops:
+                    continue
+                result_b = _nbytes(
+                    _parse_shapes(rhs.split(om.group(1) + "(")[0]))
+                ops_v = self._operand_vars(line)
+                if op == "dynamic-update-slice":
+                    upd = ops_v[1] if len(ops_v) > 1 else None
+                    ub = _nbytes(_parse_shapes(tbl.get(upd, "")))
+                    total += w * 2 * ub
+                    continue
+                if op == "dynamic-slice":
+                    total += w * 2 * result_b
+                    continue
+                io = result_b
+                for v in ops_v:
+                    if v in tbl:
+                        io += _nbytes(_parse_shapes(tbl[v]))
+                total += w * io
+        return total
+
+    def collective_bytes(self):
+        out = {c: 0 for c in COLLECTIVES}
+        counts = {c: 0 for c in COLLECTIVES}
+        for cname, lines in self.comps.items():
+            w = self._weights.get(cname, 0)
+            if w == 0:
+                continue
+            for line in lines:
+                dm = _DEF_RE.match(line)
+                if not dm:
+                    continue
+                rhs = dm.group(2)
+                for coll in COLLECTIVES:
+                    if re.search(rf"\b{coll}(?:-start)?\(", rhs):
+                        out[coll] += w * _nbytes(
+                            _parse_shapes(rhs.split(coll)[0]))
+                        counts[coll] += w
+                        break
+        return out, counts
+
+
+def analyze(hlo_text: str):
+    mod = HloModule(hlo_text)
+    coll, counts = mod.collective_bytes()
+    return {
+        "flops": mod.flops(),
+        "bytes": mod.bytes_accessed(),
+        "collective_by_type": coll,
+        "collective_counts": counts,
+        "collective_bytes": float(sum(coll.values())),
+    }

@@ -1,0 +1,34 @@
+"""Production meshes.
+
+Defined as FUNCTIONS so importing this module never touches jax device
+state (smoke tests must keep seeing 1 CPU device; only dryrun.py sets
+XLA_FLAGS for 512 placeholder devices).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """Single pod: (data=16, model=16) = 256 chips (TPU v5e pod).
+    Multi-pod: (pod=2, data=16, model=16) = 512 chips."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_pff_stage_mesh(*, stages: int = 2):
+    """Beyond-paper PFF mode: the pod axis is the pipeline-STAGE axis —
+    each pod owns a contiguous layer range, activations flow forward via
+    collective_permute, and (FF having no backward pass) nothing flows
+    back. See repro.core.pff_pod."""
+    return jax.make_mesh((stages, 16, 16), ("stage", "data", "model"))
+
+
+def make_host_mesh(axes=("data", "model")):
+    """Whatever devices exist on this host, as a (1, n) or (n,) mesh —
+    used by examples/tests on CPU."""
+    n = len(jax.devices())
+    if len(axes) == 2:
+        return jax.make_mesh((1, n), axes)
+    return jax.make_mesh((n,), axes)

@@ -1,0 +1,119 @@
+"""ShapeDtypeStruct input stand-ins for every (arch x input-shape) pair.
+
+Nothing here allocates device memory — dry-runs lower against these.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro import sharding
+from repro.configs.base import INPUT_SHAPES, SUBQUADRATIC
+from repro.models import common, transformer
+
+
+def _sds(shape, dtype, mesh=None, spec=None):
+    if mesh is None:
+        return jax.ShapeDtypeStruct(shape, dtype)
+    spec = sharding._fit(spec, shape, mesh)     # drop non-divisible axes
+    return jax.ShapeDtypeStruct(
+        shape, dtype, sharding=jax.sharding.NamedSharding(mesh, spec))
+
+
+def aux_shape(cfg, batch):
+    """Stub-frontend embedding shape for audio/vlm archs (else None)."""
+    if cfg.enc_dec:
+        return (batch, cfg.enc_seq, cfg.d_model)
+    if cfg.vision_tokens:
+        return (batch, cfg.vision_tokens, cfg.vision_dim or cfg.d_model)
+    return None
+
+
+def train_input_specs(cfg, shape, mesh=None, batch_axes=None):
+    """batch dict for the FF/BP train step: tokens (B, S+1) + optional aux."""
+    B, S = shape.global_batch, shape.seq_len
+
+    def bspec(rank):
+        if mesh is None:
+            return None
+        if batch_axes is None:
+            return sharding.data_spec(mesh, rank)
+        dims = [None] * rank
+        dims[0] = batch_axes if len(batch_axes) > 1 else batch_axes[0]
+        return jax.sharding.PartitionSpec(*dims)
+
+    batch = {"tokens": _sds((B, S + 1), jnp.int32, mesh, bspec(2))}
+    ash = aux_shape(cfg, B)
+    if ash is not None:
+        batch["aux"] = _sds(ash, common.dtype_of(cfg), mesh, bspec(3))
+    return batch
+
+
+def prefill_input_specs(cfg, shape, mesh=None):
+    B, S = shape.global_batch, shape.seq_len
+    bspec = sharding.data_spec(mesh, 2) if mesh else None
+    out = {"tokens": _sds((B, S), jnp.int32, mesh, bspec)}
+    ash = aux_shape(cfg, B)
+    if ash is not None:
+        aspec = sharding.data_spec(mesh, 3) if mesh else None
+        out["aux"] = _sds(ash, common.dtype_of(cfg), mesh, aspec)
+    return out
+
+
+def decode_input_specs(cfg, shape, mesh=None):
+    """(caches, tokens, pos) specs for serve_step with a seq_len-deep cache."""
+    B, S = shape.global_batch, shape.seq_len
+    caches = transformer.cache_specs(cfg, B, S)
+    if mesh is not None:
+        cspecs = sharding.cache_specs_tree(
+            caches, mesh, seq_axis_model=(B == 1))
+        caches = jax.tree.map(
+            lambda s, sp: _sds(s.shape, s.dtype, mesh, sp), caches, cspecs,
+            is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+    tspec = sharding.data_spec(mesh, 1) if mesh else None
+    tokens = _sds((B,), jnp.int32, mesh, tspec)
+    pos = _sds((), jnp.int32, mesh, jax.sharding.PartitionSpec()) \
+        if mesh else _sds((), jnp.int32)
+    return caches, tokens, pos
+
+
+def param_specs_abstract(cfg, mesh=None, with_opt=True, seed=0):
+    """Abstract (ShapeDtypeStruct) params + optimizer state, sharded."""
+    p_shape = jax.eval_shape(
+        lambda k: transformer.init(k, cfg), jax.random.PRNGKey(seed))
+    if with_opt:
+        from repro import optim
+        o_shape = jax.eval_shape(lambda: {
+            "m": jax.tree.map(
+                lambda s: jnp.zeros(s.shape, jnp.float32), p_shape),
+            "v": jax.tree.map(
+                lambda s: jnp.zeros(s.shape, jnp.float32), p_shape)})
+    else:
+        o_shape = None
+    if mesh is None:
+        return p_shape, o_shape
+    specs = sharding.param_specs(p_shape, mesh)
+    ns = jax.sharding.NamedSharding
+
+    def attach(s, sp):
+        return jax.ShapeDtypeStruct(s.shape, s.dtype,
+                                    sharding=ns(mesh, sp))
+
+    p_sds = jax.tree.map(
+        attach, p_shape, specs,
+        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+    if with_opt:
+        o_specs = {"m": specs, "v": specs}
+        o_sds = jax.tree.map(
+            attach, o_shape, o_specs,
+            is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+    else:
+        o_sds = None
+    return p_sds, o_sds
+
+
+def combo_is_applicable(cfg, shape_name):
+    """long_500k only for sub-quadratic sequence mixing."""
+    if shape_name == "long_500k" and cfg.name not in SUBQUADRATIC:
+        return False
+    return True

@@ -1,0 +1,140 @@
+"""Training launcher.
+
+Two modes:
+  * ``--paper-mlp``: the paper's own experiment — FF MLP on the synthetic
+    image task with a PFF schedule.
+  * ``--arch <id>``: FF-train a (reduced, unless --full) assigned
+    architecture on the synthetic LM corpus. On this CPU container the
+    reduced configs run for real; the full configs are exercised by
+    ``dryrun.py``.
+
+Examples:
+  PYTHONPATH=src python -m repro.launch.train --paper-mlp \
+      --neg-mode random --classifier goodness --epochs 60 --splits 10
+  PYTHONPATH=src python -m repro.launch.train --arch tinyllama-1.1b \
+      --steps 50 --batch 8 --seq 128
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro import checkpoint, data as data_lib, optim
+from repro.configs import get_config
+from repro.configs.ff_mlp import FFMLPConfig
+from repro.core import pff, train as train_lib
+from repro.models import transformer
+
+
+def run_paper_mlp(args):
+    task = (data_lib.cifar_like if args.cifar else data_lib.mnist_like)(
+        seed=args.seed, n_train=args.n_train, n_test=args.n_test)
+    sizes = (task.dim,) + tuple(args.hidden for _ in range(args.layers))
+    cfg = FFMLPConfig(
+        layer_sizes=sizes, epochs=args.epochs, splits=args.splits,
+        neg_mode=args.neg_mode, classifier=args.classifier,
+        goodness_fn=args.goodness_fn, batch_size=args.batch,
+        seed=args.seed)
+    t0 = time.time()
+    if args.schedule == "federated":
+        res = pff.train_federated(cfg, task, args.nodes,
+                                  probe_every=args.probe, verbose=True)
+    else:
+        res = pff.train_ff_mlp(cfg, task, probe_every=args.probe,
+                               verbose=True)
+    wall = time.time() - t0
+    print(f"\ntest acc {res.test_acc:.4f}  train acc {res.train_acc:.4f}"
+          f"  wall {wall:.1f}s")
+    for sched, n in (("sequential", 1), ("single_layer", args.nodes),
+                     ("all_layers", args.nodes)):
+        sim = pff.simulate_schedule(res.records, sched, n)
+        print(f"  {sched:13s} N={n}: time={sim.makespan:8.1f}s "
+              f"speedup={sim.speedup:5.2f}x util={sim.utilization:.2f}")
+    return res
+
+
+def run_lm(args):
+    cfg = get_config(args.arch)
+    if not args.full:
+        cfg = cfg.reduced()
+    if args.neg_mode:
+        cfg = dataclasses.replace(
+            cfg, ff=dataclasses.replace(cfg.ff, neg_mode=args.neg_mode))
+    key = jax.random.PRNGKey(args.seed)
+    params = transformer.init(key, cfg)
+    opt = optim.adam_init(params)
+    make = (train_lib.make_bp_train_step if args.baseline
+            else train_lib.make_ff_train_step)
+    step_fn = jax.jit(make(cfg, lr=args.lr))
+
+    aux = None
+    if cfg.enc_dec:
+        aux = jax.random.normal(key, (args.batch, cfg.enc_seq,
+                                      cfg.d_model), cfg.dtype)
+    elif cfg.vision_tokens:
+        aux = jax.random.normal(key, (args.batch, cfg.vision_tokens,
+                                      cfg.d_model), cfg.dtype)
+
+    t0 = time.time()
+    for i, tokens in enumerate(data_lib.lm_batches(
+            cfg.vocab, args.batch, args.seq, args.steps, args.seed)):
+        batch = {"tokens": jnp.asarray(tokens)}
+        if aux is not None:
+            batch["aux"] = aux
+        params, opt, metrics = step_fn(params, opt, batch, i + 1)
+        if (i + 1) % args.log_every == 0:
+            m = {k: round(float(v), 4) for k, v in metrics.items()}
+            print(f"step {i + 1}: {m}  ({time.time() - t0:.1f}s)")
+    if args.ckpt:
+        checkpoint.save(args.ckpt, params, step=args.steps)
+        print("saved", args.ckpt)
+    return params
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--paper-mlp", action="store_true")
+    ap.add_argument("--cifar", action="store_true")
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--baseline", action="store_true",
+                    help="backprop baseline instead of FF")
+    ap.add_argument("--schedule", default="all_layers",
+                    choices=["sequential", "single_layer", "all_layers",
+                             "federated"])
+    ap.add_argument("--neg-mode", default=None,
+                    choices=[None, "adaptive", "fixed", "random"])
+    ap.add_argument("--classifier", default="goodness",
+                    choices=["goodness", "softmax"])
+    ap.add_argument("--goodness-fn", default="sumsq",
+                    choices=["sumsq", "perf_opt"])
+    ap.add_argument("--nodes", type=int, default=4)
+    ap.add_argument("--hidden", type=int, default=500)
+    ap.add_argument("--layers", type=int, default=4)
+    ap.add_argument("--epochs", type=int, default=60)
+    ap.add_argument("--splits", type=int, default=10)
+    ap.add_argument("--n-train", type=int, default=4032)
+    ap.add_argument("--n-test", type=int, default=1000)
+    ap.add_argument("--probe", type=int, default=0)
+    ap.add_argument("--steps", type=int, default=30)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--log-every", type=int, default=5)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--ckpt", default=None)
+    args = ap.parse_args()
+    if args.paper_mlp:
+        run_paper_mlp(args)
+    elif args.arch:
+        run_lm(args)
+    else:
+        ap.error("need --paper-mlp or --arch")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,96 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma, arXiv:2402.19427).
+
+    r_t = sigmoid(W_a x_t);  i_t = sigmoid(W_x x_t)
+    a_t = exp(-c * softplus(Lambda) * r_t)            (c = 8)
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+Block: y = out_proj( gelu(gate_branch) * RG-LRU(conv1d(x_branch)) ).
+Prefill uses an associative scan (log-depth); decode is a single-step
+recurrence.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common
+
+_C = 8.0
+
+
+def init(key, cfg):
+    g = cfg.rglru
+    d = cfg.d_model
+    W = g.lru_width or d
+    ks = jax.random.split(key, 7)
+    dtype = common.dtype_of(cfg)
+    # Lambda init so that a^c in [0.9, 0.999] (Griffin appendix)
+    u = jax.random.uniform(ks[4], (W,), jnp.float32, 0.9 ** 2, 0.999 ** 2)
+    lam = jnp.log(jnp.expm1(-jnp.log(u) / (2 * _C)))   # inv softplus
+    return {
+        "x_branch": common.dense_init(ks[0], (d, W), dtype),
+        "gate_branch": common.dense_init(ks[1], (d, W), dtype),
+        "conv_w": (jax.random.normal(ks[2], (g.conv_width, W), jnp.float32)
+                   * 0.1).astype(dtype),
+        "w_a": common.dense_init(ks[3], (W, W), dtype),
+        "w_x": common.dense_init(ks[5], (W, W), dtype),
+        "lambda": lam,
+        "out_proj": common.dense_init(ks[6], (W, d), dtype),
+    }
+
+
+def _gates(p, x):
+    r = jax.nn.sigmoid((x @ p["w_a"]).astype(jnp.float32))
+    i = jax.nn.sigmoid((x @ p["w_x"]).astype(jnp.float32))
+    log_a = -_C * jax.nn.softplus(p["lambda"]) * r     # (..., W), <= 0
+    a = jnp.exp(log_a)
+    beta = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+    return a, beta * i * x.astype(jnp.float32)
+
+
+def forward(p, cfg, x, h0=None, conv0=None):
+    """x: (B, S, d) -> (B, S, d); returns (y, h_T, conv_tail)."""
+    from repro.models.ssm import _causal_conv
+    g = cfg.rglru
+    xb = x @ p["x_branch"]
+    gate = x @ p["gate_branch"]
+    if conv0 is not None:
+        ext = jnp.concatenate([conv0, xb], axis=1)
+        xb = _causal_conv(ext, p["conv_w"])[:, conv0.shape[1]:]
+        conv_tail = ext[:, -(g.conv_width - 1):]
+    else:
+        conv_tail = xb[:, -(g.conv_width - 1):]     # raw (pre-conv) tail
+        xb = _causal_conv(xb, p["conv_w"])
+    a, b = _gates(p, xb)                               # (B, S, W) f32
+
+    if h0 is not None:
+        b = b.at[:, 0].add(a[:, 0] * h0.astype(jnp.float32))
+    aa, hh = jax.lax.associative_scan(
+        lambda e1, e2: (e2[0] * e1[0], e2[0] * e1[1] + e2[1]),
+        (a, b), axis=1)
+    y = hh.astype(x.dtype) * jax.nn.gelu(gate.astype(jnp.float32)
+                                         ).astype(x.dtype)
+    return y @ p["out_proj"], hh[:, -1], conv_tail
+
+
+def init_cache(cfg, batch, dtype):
+    g = cfg.rglru
+    W = g.lru_width or cfg.d_model
+    return {
+        "h": jnp.zeros((batch, W), jnp.float32),
+        "conv": jnp.zeros((batch, g.conv_width - 1, W), dtype),
+    }
+
+
+def decode_step(p, cfg, cache, x):
+    """x: (B, d) -> (y (B, d), new cache)."""
+    xb = x @ p["x_branch"]
+    gate = x @ p["gate_branch"]
+    conv_in = jnp.concatenate([cache["conv"], xb[:, None]], axis=1)
+    xb = jnp.einsum("bwc,wc->bc", conv_in.astype(jnp.float32),
+                    p["conv_w"].astype(jnp.float32)).astype(x.dtype)
+    a, b = _gates(p, xb)
+    h = a * cache["h"] + b
+    y = h.astype(x.dtype) * jax.nn.gelu(gate.astype(jnp.float32)
+                                        ).astype(x.dtype)
+    return y @ p["out_proj"], {"h": h, "conv": conv_in[:, 1:]}

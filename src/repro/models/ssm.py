@@ -1,0 +1,196 @@
+"""Mamba-2 SSD (state-space duality) block, chunked algorithm
+[arXiv:2405.21060], n_groups=1.
+
+Train/prefill: chunked dual form — quadratic attention-like compute inside
+chunks of length ``chunk`` + a linear scan carrying the (H, hd, N) state
+across chunks. Decode: O(1) recurrent update.
+
+The chunk inner computation is the compute hot-spot and has a Pallas
+kernel in ``repro.kernels.mamba2_ssd`` (validated against this module).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common
+
+
+def init(key, cfg):
+    """Single fused input projection (z | x | b | c | dt), as in the
+    reference Mamba-2: one matmul instead of five — 5x fewer backward
+    activation-cotangent all-reduces under tensor parallelism (§Perf)."""
+    s = cfg.ssm
+    d = cfg.d_model
+    d_inner = s.expand * d
+    H = d_inner // s.head_dim
+    N = s.state_dim
+    ks = jax.random.split(key, 4)
+    dt = jnp.exp(jax.random.uniform(ks[2], (H,), jnp.float32) *
+                 (jnp.log(0.1) - jnp.log(0.001)) + jnp.log(0.001))
+    dtype = common.dtype_of(cfg)
+    return {
+        "in_proj": common.dense_init(
+            ks[0], (d, 2 * d_inner + 2 * N + H), dtype),
+        "conv_w": (jax.random.normal(ks[1], (s.conv_width, d_inner + 2 * N),
+                                     jnp.float32) * 0.1).astype(dtype),
+        "A_log": jnp.zeros((H,), jnp.float32),
+        "D": jnp.ones((H,), jnp.float32),
+        "dt_bias": jnp.log(jnp.expm1(dt)),        # inverse softplus
+        "norm": jnp.zeros((d_inner,), jnp.float32),
+        "out_proj": common.dense_init(ks[3], (d_inner, d), dtype),
+    }
+
+
+def _causal_conv(x, w):
+    """Depthwise causal conv. x: (B, S, C); w: (cw, C)."""
+    cw = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (cw - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x, dtype=jnp.float32)
+    for i in range(cw):
+        out = out + pad[:, i:i + x.shape[1], :].astype(jnp.float32) * w[i]
+    return out.astype(x.dtype)
+
+
+def _proj_inputs(p, cfg, x):
+    s = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    H = d_inner // s.head_dim
+    N = s.state_dim
+    zxbcdt = x @ p["in_proj"]
+    return jnp.split(
+        zxbcdt, [d_inner, 2 * d_inner, 2 * d_inner + N,
+                 2 * d_inner + 2 * N], axis=-1)
+
+
+def ssd_chunked(xh, dt, A, b, c, chunk, h0=None):
+    """Chunked SSD scan, streaming over chunks.
+
+    xh: (B, S, H, hd); dt: (B, S, H) post-softplus; A: (H,) negative;
+    b, c: (B, S, N). Returns y: (B, S, H, hd) and final state (B, H, hd, N).
+
+    One ``lax.scan`` over the nc chunks carries the (B, H, hd, N) state;
+    each iteration computes the dual (quadratic) intra-chunk term and the
+    state contribution. Peak live memory is ONE chunk's (B, L, L, H)
+    decay tensor — independent of sequence length (the naive all-chunks
+    formulation needs B*S*L*H floats, terabytes at 32k+).
+    """
+    B, S, H, hd = xh.shape
+    N = b.shape[-1]
+    L = min(chunk, S)
+    if S % L:                       # pad to a chunk multiple (dt=0 rows
+        pad = L - S % L             # contribute nothing to the state)
+        zpad = lambda a: jnp.pad(a, [(0, 0), (0, pad)] +
+                                 [(0, 0)] * (a.ndim - 2))
+        y, hT = ssd_chunked(zpad(xh), zpad(dt), A, zpad(b), zpad(c),
+                            chunk, h0)
+        return y[:, :S], hT
+    nc = S // L
+    f32 = jnp.float32
+
+    dA = (dt.astype(f32) * A).reshape(B, nc, L, H)           # negative
+    xbar = (xh.astype(f32) * dt.astype(f32)[..., None]).reshape(
+        B, nc, L, H, hd)
+    bc = b.astype(f32).reshape(B, nc, L, N)
+    cc = c.astype(f32).reshape(B, nc, L, N)
+    mask = jnp.tril(jnp.ones((L, L), bool))
+
+    def body(h, inp):
+        dA_c, xbar_c, b_c, c_c = inp      # (B,L,H),(B,L,H,hd),(B,L,N)x2
+        cums = jnp.cumsum(dA_c, axis=1)                      # (B,L,H)
+        # intra-chunk dual form
+        seg = cums[:, :, None, :] - cums[:, None, :, :]      # (B,i,j,H)
+        decay = jnp.where(mask[None, :, :, None], jnp.exp(seg), 0.0)
+        scores = jnp.einsum("bin,bjn->bij", c_c, b_c)
+        y = jnp.einsum("bij,bijh,bjhd->bihd", scores, decay, xbar_c)
+        # inter-chunk: contribution of the carried state
+        decay_in = jnp.exp(cums)                             # (B,L,H)
+        y = y + jnp.einsum("bin,bhdn,bih->bihd", c_c, h, decay_in)
+        # state update
+        last = cums[:, -1:, :]                               # (B,1,H)
+        decay_out = jnp.exp(last - cums)                     # (B,L,H)
+        st = jnp.einsum("bjh,bjn,bjhd->bhdn", decay_out, b_c, xbar_c)
+        h = h * jnp.exp(last[:, 0, :])[..., None, None] + st
+        return h, y
+
+    h0 = jnp.zeros((B, H, hd, N), f32) if h0 is None else h0.astype(f32)
+    hT, ys = jax.lax.scan(
+        body, h0, (dA.transpose(1, 0, 2, 3), xbar.transpose(1, 0, 2, 3, 4),
+                   bc.transpose(1, 0, 2, 3), cc.transpose(1, 0, 2, 3)))
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(B, S, H, hd)
+    return y, hT
+
+
+def forward(p, cfg, x, h0=None, conv0=None, return_cache=False):
+    """Full-sequence forward. x: (B, S, d) -> (B, S, d).
+
+    With ``return_cache`` also returns {"h": final state, "conv": raw
+    pre-conv tail} ready for ``decode_step``.
+    """
+    s = cfg.ssm
+    B, S, d = x.shape
+    d_inner = s.expand * d
+    H = d_inner // s.head_dim
+    z, xin, b, c, dt_raw = _proj_inputs(p, cfg, x)
+    xbc = jnp.concatenate([xin, b, c], axis=-1)
+    if conv0 is not None:
+        xbc_ext = jnp.concatenate([conv0, xbc], axis=1)
+        conv_tail = xbc_ext[:, -(s.conv_width - 1):]
+        xbc = _causal_conv(xbc_ext, p["conv_w"])[:, conv0.shape[1]:]
+    else:
+        conv_tail = xbc[:, -(s.conv_width - 1):]    # raw (pre-conv) tail
+        xbc = _causal_conv(xbc, p["conv_w"])
+    xbc = jax.nn.silu(xbc.astype(jnp.float32)).astype(x.dtype)
+    xin, b, c = jnp.split(xbc, [d_inner, d_inner + s.state_dim], axis=-1)
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    xh = xin.reshape(B, S, H, s.head_dim)
+    y, hT = ssd_chunked(xh, dt, A, b, c, s.chunk, h0)
+    y = y + p["D"][:, None] * xh.astype(jnp.float32)
+    y = y.reshape(B, S, d_inner)
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    y = common.rms_norm(y.astype(x.dtype), p["norm"], cfg.norm_eps)
+    out = y @ p["out_proj"]
+    if return_cache:
+        return out, {"h": hT, "conv": conv_tail}
+    return out
+
+
+def init_cache(cfg, batch, dtype):
+    s = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    H = d_inner // s.head_dim
+    return {
+        "h": jnp.zeros((batch, H, s.head_dim, s.state_dim), jnp.float32),
+        "conv": jnp.zeros((batch, s.conv_width - 1,
+                           d_inner + 2 * s.state_dim), dtype),
+    }
+
+
+def decode_step(p, cfg, cache, x):
+    """x: (B, d) single token. Returns (y (B, d), new cache)."""
+    s = cfg.ssm
+    B, d = x.shape
+    d_inner = s.expand * d
+    H = d_inner // s.head_dim
+    z, xin, b, c, dt_raw = _proj_inputs(p, cfg, x)
+    xbc = jnp.concatenate([xin, b, c], axis=-1)               # (B, C)
+    conv_in = jnp.concatenate([cache["conv"], xbc[:, None]], axis=1)
+    conv_out = jnp.einsum("bwc,wc->bc", conv_in.astype(jnp.float32),
+                          p["conv_w"].astype(jnp.float32))
+    xbc = jax.nn.silu(conv_out).astype(x.dtype)
+    xin, b, c = jnp.split(xbc, [d_inner, d_inner + s.state_dim], axis=-1)
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])  # (B,H)
+    A = -jnp.exp(p["A_log"])
+    xh = xin.reshape(B, H, s.head_dim).astype(jnp.float32)
+    dA = jnp.exp(dt * A)                                      # (B, H)
+    h = cache["h"] * dA[..., None, None] + jnp.einsum(
+        "bh,bhd,bn->bhdn", dt, xh, b.astype(jnp.float32))
+    y = jnp.einsum("bn,bhdn->bhd", c.astype(jnp.float32), h)
+    y = y + p["D"][:, None] * xh
+    y = y.reshape(B, d_inner) * jax.nn.silu(z.astype(jnp.float32))
+    y = common.rms_norm(y.astype(x.dtype), p["norm"], cfg.norm_eps)
+    new_cache = {"h": h, "conv": conv_in[:, 1:]}
+    return y @ p["out_proj"], new_cache

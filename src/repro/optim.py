@@ -1,0 +1,57 @@
+"""Adam optimizer (pytree-native) + the paper's LR cooldown schedule.
+
+Written as plain functions over pytrees so the FF train step can apply
+per-layer updates *inside* a ``lax.scan`` over stacked layer params — the
+optimizer state is a pytree of the same structure/stacking as the params.
+
+State: {"m": tree, "v": tree} in float32 (params may be bf16). The step
+count is passed explicitly (it is the training loop's step counter) so
+state stays a pure array pytree that shards exactly like the params.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def adam_init(params):
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return {"m": jax.tree.map(zeros, params),
+            "v": jax.tree.map(zeros, params)}
+
+
+def adam_update(params, grads, state, *, lr, step, b1=0.9, b2=0.999,
+                eps=1e-8, weight_decay=0.0):
+    """Returns (new_params, new_state). ``step`` is 1-based (scalar)."""
+    t = jnp.asarray(step, jnp.float32)
+    c1 = 1.0 - b1 ** t
+    c2 = 1.0 - b2 ** t
+
+    def moments(g, m, v):
+        gf = g.astype(jnp.float32)
+        return (b1 * m + (1 - b1) * gf,
+                b2 * v + (1 - b2) * jnp.square(gf))
+
+    def upd(p, m2, v2):
+        u = (m2 / c1) / (jnp.sqrt(v2 / c2) + eps)
+        if weight_decay:
+            u = u + weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * u).astype(p.dtype)
+
+    # three maps (XLA CSEs the shared subexpressions under jit)
+    new_m = jax.tree.map(lambda g, m, v: moments(g, m, v)[0],
+                         grads, state["m"], state["v"])
+    new_v = jax.tree.map(lambda g, m, v: moments(g, m, v)[1],
+                         grads, state["m"], state["v"])
+    new_p = jax.tree.map(upd, params, new_m, new_v)
+    return new_p, {"m": new_m, "v": new_v}
+
+
+def cooldown_lr(base_lr, epoch, total_epochs, cooldown_after=0.5):
+    """Paper §5.1: constant LR, then linear decay to 0 after the midpoint.
+
+    Works with scalar or traced ``epoch`` (can be fractional).
+    """
+    frac = jnp.asarray(epoch, jnp.float32) / max(total_epochs, 1)
+    scale = jnp.clip((1.0 - frac) / max(1.0 - cooldown_after, 1e-9), 0.0, 1.0)
+    return base_lr * scale

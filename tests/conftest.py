@@ -1,0 +1,9 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS here on purpose — tests must see
+the real (single) CPU device; only launch/dryrun.py fakes 512 devices."""
+import jax
+import pytest
+
+
+@pytest.fixture(scope="session")
+def key():
+    return jax.random.PRNGKey(0)

@@ -1,0 +1,89 @@
+"""Unit tests for the FF primitives (repro.core.ff)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import ff
+
+
+def test_goodness_values():
+    y = jnp.asarray([[1.0, 2.0, 2.0], [0.0, 0.0, 0.0]])
+    np.testing.assert_allclose(ff.goodness(y), [9.0, 0.0])
+    np.testing.assert_allclose(ff.mean_goodness(y), [3.0, 0.0])
+
+
+def test_ff_loss_direction():
+    """Loss must fall as pos goodness rises and neg goodness falls."""
+    theta = 2.0
+    base = ff.ff_loss(jnp.asarray(2.0), jnp.asarray(2.0), theta)
+    better = ff.ff_loss(jnp.asarray(4.0), jnp.asarray(0.5), theta)
+    worse = ff.ff_loss(jnp.asarray(0.5), jnp.asarray(4.0), theta)
+    assert better < base < worse
+
+
+def test_ff_loss_masked_matches_split():
+    g = jnp.asarray([3.0, 1.0, 0.5, 2.5])
+    is_pos = jnp.asarray([1.0, 1.0, 0.0, 0.0])
+    masked = ff.ff_loss_masked(g, is_pos, 2.0)
+    # masked averages over all 4 samples; the pairwise form averages each
+    # half separately -> exactly 2x the masked value
+    split = 0.5 * (ff.ff_loss(g[0], g[2], 2.0) + ff.ff_loss(g[1], g[3], 2.0))
+    np.testing.assert_allclose(2 * masked, split, rtol=1e-6)
+
+
+def test_overlay_label_replaces_first_pixels():
+    x = jnp.ones((3, 20)) * 0.5
+    y = jnp.asarray([0, 3, 9])
+    out = ff.overlay_label(x, y, 10)
+    assert out.shape == (3, 20)
+    np.testing.assert_allclose(out[0, :10],
+                               jax.nn.one_hot(0, 10))
+    np.testing.assert_allclose(out[1, :10], jax.nn.one_hot(3, 10))
+    np.testing.assert_allclose(out[:, 10:], 0.5)
+
+
+def test_overlay_neutral():
+    x = jnp.ones((2, 15))
+    out = ff.overlay_neutral(x, 10)
+    np.testing.assert_allclose(out[:, :10], 0.1)
+
+
+def test_random_wrong_labels_never_correct():
+    key = jax.random.PRNGKey(1)
+    y = jnp.arange(10).repeat(50)
+    wrong = ff.random_wrong_labels(key, y, 10)
+    assert not bool(jnp.any(wrong == y))
+    assert bool(jnp.all((wrong >= 0) & (wrong < 10)))
+
+
+def test_adaptive_wrong_labels_masks_true_class():
+    scores = jnp.asarray([[9.0, 5.0, 1.0], [1.0, 9.0, 5.0]])
+    y = jnp.asarray([0, 1])
+    wrong = ff.adaptive_wrong_labels(scores, y)
+    # true label masked -> picks the runner-up
+    np.testing.assert_array_equal(wrong, [1, 2])
+
+
+def test_corrupt_tokens_in_vocab_and_different():
+    key = jax.random.PRNGKey(2)
+    tokens = jax.random.randint(key, (8, 64), 0, 100)
+    neg = ff.corrupt_tokens(key, tokens, 100)
+    assert neg.shape == tokens.shape
+    assert bool(jnp.all((neg >= 0) & (neg < 100)))
+    # at least some positions corrupted across the batch
+    assert int(jnp.sum(neg != tokens)) > 10
+
+
+def test_adaptive_corrupt_tokens_shapes():
+    key = jax.random.PRNGKey(3)
+    tokens = jax.random.randint(key, (4, 32), 0, 50)
+    logits = jax.random.normal(key, (4, 32, 50))
+    neg = ff.adaptive_corrupt_tokens(key, tokens, logits)
+    assert neg.shape == tokens.shape
+    assert bool(jnp.all((neg >= 0) & (neg < 50)))
+
+
+def test_peer_norm_zero_when_uniform():
+    y = jnp.ones((16, 8))
+    np.testing.assert_allclose(ff.peer_norm_loss(y), 0.0, atol=1e-7)

@@ -1,0 +1,115 @@
+"""Hypothesis property tests on system invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro import optim
+from repro.core import ff
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+@given(seed=st.integers(0, 2**31 - 1),
+       vocab=st.integers(10, 50000),
+       b=st.integers(1, 8), s=st.integers(8, 128))
+@settings(**SETTINGS)
+def test_corrupt_tokens_always_valid(seed, vocab, b, s):
+    key = jax.random.PRNGKey(seed)
+    tokens = jax.random.randint(key, (b, s), 0, vocab)
+    neg = ff.corrupt_tokens(key, tokens, vocab)
+    assert neg.shape == tokens.shape
+    assert bool(jnp.all((neg >= 0) & (neg < vocab)))
+
+
+@given(seed=st.integers(0, 2**31 - 1), c=st.integers(2, 20),
+       n=st.integers(1, 64))
+@settings(**SETTINGS)
+def test_wrong_labels_never_true(seed, c, n):
+    key = jax.random.PRNGKey(seed)
+    y = jax.random.randint(key, (n,), 0, c)
+    wrong = ff.random_wrong_labels(key, y, c)
+    assert not bool(jnp.any(wrong == y))
+    assert bool(jnp.all((wrong >= 0) & (wrong < c)))
+
+
+@given(gp=st.floats(-10, 10), gn=st.floats(-10, 10),
+       theta=st.floats(0.1, 5))
+@settings(**SETTINGS)
+def test_ff_loss_monotone(gp, gn, theta):
+    """Loss strictly decreases in g_pos and increases in g_neg."""
+    eps = 0.1
+    l0 = float(ff.ff_loss(jnp.float32(gp), jnp.float32(gn), theta))
+    l_pos = float(ff.ff_loss(jnp.float32(gp + eps), jnp.float32(gn), theta))
+    l_neg = float(ff.ff_loss(jnp.float32(gp), jnp.float32(gn + eps), theta))
+    assert l_pos < l0 + 1e-9
+    assert l_neg > l0 - 1e-9
+
+
+@given(seed=st.integers(0, 2**31 - 1), lr=st.floats(1e-5, 1e-1))
+@settings(**SETTINGS)
+def test_adam_descends_quadratic(seed, lr):
+    """Adam on f(x) = |x|^2 must reduce the loss."""
+    key = jax.random.PRNGKey(seed)
+    x = {"w": jax.random.normal(key, (8,)) * 3}
+    state = optim.adam_init(x)
+    f = lambda p: jnp.sum(p["w"] ** 2)
+    for step in range(1, 30):
+        g = jax.grad(f)(x)
+        x, state = optim.adam_update(x, g, state, lr=lr, step=step)
+    assert float(f(x)) < float(jnp.sum((jax.random.normal(key, (8,)) * 3)
+                                       ** 2))
+
+
+@given(e=st.integers(1, 200), total=st.integers(10, 400))
+@settings(**SETTINGS)
+def test_cooldown_lr_bounds(e, total):
+    lr = float(optim.cooldown_lr(0.01, min(e, total), total, 0.5))
+    assert 0.0 <= lr <= 0.01 + 1e-12
+    # before the midpoint the LR is exactly base
+    if e <= total // 2 - 1:
+        assert abs(lr - 0.01) < 1e-9
+
+
+@given(seed=st.integers(0, 2**31 - 1),
+       b=st.integers(1, 3),
+       nc=st.integers(1, 4),
+       h=st.sampled_from([1, 2, 4]),
+       n=st.sampled_from([4, 16]))
+@settings(max_examples=10, deadline=None)
+def test_ssd_streaming_equals_sequential(seed, b, nc, h, n):
+    """The chunked SSD scan == exact token recurrence for random sizes."""
+    from repro.kernels import ref
+    from repro.models.ssm import ssd_chunked
+    key = jax.random.PRNGKey(seed)
+    L = 16
+    S = nc * L
+    hd = 8
+    ks = jax.random.split(key, 5)
+    xh = jax.random.normal(ks[0], (b, S, h, hd), jnp.float32)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, S, h)))
+    A = -jnp.exp(jax.random.normal(ks[2], (h,)) * 0.3)
+    bb = jax.random.normal(ks[3], (b, S, n), jnp.float32)
+    cc = jax.random.normal(ks[4], (b, S, n), jnp.float32)
+    y, hT = ssd_chunked(xh, dt, A, bb, cc, L)
+    yr, hTr = ref.mamba2_ssd_ref(xh * dt[..., None], dt * A, bb, cc)
+    np.testing.assert_allclose(y, yr, rtol=3e-4, atol=3e-4)
+    np.testing.assert_allclose(hT, hTr, rtol=3e-4, atol=3e-4)
+
+
+@given(seed=st.integers(0, 2**31 - 1))
+@settings(max_examples=10, deadline=None)
+def test_checkpoint_roundtrip(seed, tmp_path_factory):
+    from repro import checkpoint
+    key = jax.random.PRNGKey(seed)
+    tree = {"a": jax.random.normal(key, (4, 3)),
+            "b": ({"c": jnp.arange(5)},
+                  jax.random.normal(key, (2,), jnp.bfloat16))}
+    path = str(tmp_path_factory.mktemp("ckpt") / f"t{seed}.npz")
+    checkpoint.save(path, tree, step=7)
+    restored, step = checkpoint.restore(path, tree)
+    assert step == 7
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(
+            np.asarray(jnp.asarray(a, jnp.float32)),
+            np.asarray(jnp.asarray(b, jnp.float32)))

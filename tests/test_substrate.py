@@ -1,0 +1,127 @@
+"""Substrate tests: data determinism, sharding rules, CE chunking."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import data as data_lib, sharding
+from repro.core import train as train_lib
+from repro.models import common
+
+
+def test_image_tasks_deterministic():
+    a = data_lib.mnist_like(n_train=100, n_test=50)
+    b = data_lib.mnist_like(n_train=100, n_test=50)
+    np.testing.assert_array_equal(a.x_train, b.x_train)
+    np.testing.assert_array_equal(a.y_test, b.y_test)
+    assert a.x_train.shape == (100, 784)
+    assert a.x_train.min() >= 0 and a.x_train.max() <= 1
+
+
+def test_cifar_like_is_harder():
+    """Linear probe separability: cifar-like < mnist-like (paper's gap)."""
+    def probe_acc(t):
+        X = np.c_[t.x_train, np.ones(len(t.x_train))]
+        W = np.linalg.lstsq(X, np.eye(10)[t.y_train], rcond=None)[0]
+        Xt = np.c_[t.x_test, np.ones(len(t.x_test))]
+        return ((Xt @ W).argmax(1) == t.y_test).mean()
+
+    m = probe_acc(data_lib.mnist_like(n_train=2000, n_test=500))
+    c = probe_acc(data_lib.cifar_like(n_train=2000, n_test=500))
+    assert m > c + 0.1
+
+
+def test_shard_task_partition():
+    t = data_lib.mnist_like(n_train=100, n_test=10)
+    shards = [data_lib.shard_task(t, i, 4) for i in range(4)]
+    total = sum(len(s.x_train) for s in shards)
+    assert total == 100
+    assert all(len(s.x_test) == 10 for s in shards)
+
+
+def test_lm_batches_deterministic_and_in_vocab():
+    a = list(data_lib.lm_batches(1000, 2, 32, 3, seed=1))
+    b = list(data_lib.lm_batches(1000, 2, 32, 3, seed=1))
+    for x, y in zip(a, b):
+        np.testing.assert_array_equal(x, y)
+        assert x.shape == (2, 33)
+        assert x.min() >= 0 and x.max() < 1000
+
+
+def test_lm_has_learnable_structure():
+    """Markov corpus: bigram statistics are far from uniform."""
+    toks = next(iter(data_lib.lm_batches(256, 16, 512, 1, seed=0)))
+    pairs = {}
+    for row in toks:
+        for a, b in zip(row[:-1], row[1:]):
+            pairs.setdefault(int(a), set()).add(int(b))
+    # average branching far below vocab size
+    avg_branch = np.mean([len(v) for v in pairs.values()])
+    assert avg_branch < 64
+
+
+def test_ce_chunked_matches_dense(key):
+    B, S, d, V = 2, 48, 16, 37
+    h = jax.random.normal(key, (B, S, d))
+    w = jax.random.normal(key, (V, d))
+    labels = jax.random.randint(key, (B, S), 0, V)
+    mask = (jax.random.uniform(key, (B, S)) > 0.3).astype(jnp.float32)
+    total = train_lib._ce_chunked(h, w, labels, mask)
+    logits = jnp.einsum("bsd,vd->bsv", h, w)
+    lp = jax.nn.log_softmax(logits)
+    ce = -jnp.take_along_axis(lp, labels[..., None], axis=-1)[..., 0]
+    np.testing.assert_allclose(total, jnp.sum(ce * mask), rtol=1e-5)
+
+
+def test_ce_chunked_grads_match(key):
+    B, S, d, V = 2, 32, 8, 11
+    h = jax.random.normal(key, (B, S, d))
+    w = jax.random.normal(key, (V, d))
+    labels = jax.random.randint(key, (B, S), 0, V)
+    mask = jnp.ones((B, S))
+
+    g1 = jax.grad(lambda hh: train_lib._ce_chunked(hh, w, labels, mask))(h)
+
+    def dense(hh):
+        lp = jax.nn.log_softmax(jnp.einsum("bsd,vd->bsv", hh, w))
+        ce = -jnp.take_along_axis(lp, labels[..., None], axis=-1)[..., 0]
+        return jnp.sum(ce * mask)
+
+    g2 = jax.grad(dense)(h)
+    np.testing.assert_allclose(g1, g2, rtol=2e-4, atol=2e-5)
+
+
+def test_param_specs_divisible_on_production_mesh():
+    """Every rule-produced spec must divide the actual param shapes for
+    every assigned arch on the 16x16 mesh (validated abstractly)."""
+    from repro.configs import get_config, list_configs
+    from repro.models import transformer
+
+    class FakeMesh:
+        shape = {"data": 16, "model": 16, "pod": 2}
+        axis_names = ("data", "model")
+
+    mesh = FakeMesh()
+    for arch in list_configs():
+        cfg = get_config(arch)
+        p = jax.eval_shape(lambda k: transformer.init(k, cfg),
+                           jax.random.PRNGKey(0))
+        specs = sharding.param_specs(p, mesh)
+        for (path, leaf), (_, spec) in zip(
+                jax.tree_util.tree_flatten_with_path(p)[0],
+                jax.tree_util.tree_flatten_with_path(
+                    specs, is_leaf=lambda x: isinstance(
+                        x, jax.sharding.PartitionSpec))[0]):
+            for dim, name in zip(leaf.shape, tuple(spec)):
+                if name is None:
+                    continue
+                size = 1
+                for n in (name if isinstance(name, tuple) else (name,)):
+                    size *= mesh.shape[n]
+                assert dim % size == 0, (arch, path, leaf.shape, spec)
+
+
+def test_rms_norm_properties(key):
+    x = jax.random.normal(key, (4, 32)) * 5
+    y = common.rms_normalize(x)
+    np.testing.assert_allclose(jnp.mean(y * y, -1), 1.0, rtol=1e-4)
