@@ -1,0 +1,15 @@
+PY := PYTHONPATH=src python
+
+.PHONY: test bench bench-smoke
+
+test:
+	$(PY) -m pytest -q
+
+# Fast perf/correctness gate: FF hot-loop baseline (ref vs fused Pallas)
+# + kernel-vs-oracle error budget. Exits non-zero on a regression.
+bench-smoke:
+	$(PY) -m benchmarks.run --only=ff_hotloop
+	$(PY) -m benchmarks.run --only=kernels
+
+bench:
+	$(PY) -m benchmarks.run

@@ -1,0 +1,242 @@
+"""FF training hot-loop benchmark: seed-style unfused steps vs the
+stacked single-matmul path vs the fused Pallas custom_vjp kernel.
+
+Three variants of the chapter step are timed across the paper's
+[784 -> 2000 -> 2000 -> 2000 -> 2000] layer shapes:
+
+  seed_unfused — the pre-PR hot loop: two separate (B, K) matmuls per
+                 step (pos + neg) under jax.grad (4 matmul dispatches
+                 per step including backward).
+  ref_stacked  — the current loop with kernel_impl=ref: ONE (2B, K)
+                 stacked matmul per direction (2 dispatches per step).
+  pallas_fused — the current loop with kernel_impl=pallas: the fused
+                 matmul -> ReLU -> goodness Pallas kernel + the fused
+                 backward kernel (interpret mode on this CPU container,
+                 Mosaic on a real TPU).
+
+Matmul dispatch counts are measured from the jaxprs (dot_general eqns in
+the gradient computation), not asserted by hand. Results land in
+``BENCH_ff_hotloop.json`` at the repo root so every future PR has a
+trajectory to beat; gradient max-err vs the oracle is included so
+``benchmarks/run.py`` can fail loudly on correctness regressions.
+
+NOTE: pallas timings on this container are interpret-mode and NOT
+indicative of TPU wall-clock; the load-bearing CPU numbers are
+seed_unfused vs ref_stacked (dispatch halving) and the dispatch counts.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro import optim
+from repro.core import ff, ff_mlp
+
+PAPER_SIZES = (784, 2000, 2000, 2000, 2000)
+THETA = 2.0
+
+
+# ---------------------------------------------------------------------------
+# Seed-style (pre-PR) chapter step: two unfused matmuls per step
+# ---------------------------------------------------------------------------
+
+def _seed_layer_loss(lp, xb_pos, xb_neg, theta, peer_w):
+    y_pos = jax.nn.relu(xb_pos @ lp["w"] + lp["b"])
+    y_neg = jax.nn.relu(xb_neg @ lp["w"] + lp["b"])
+    loss = ff.ff_loss(ff.mean_goodness(y_pos), ff.mean_goodness(y_neg),
+                      theta)
+    if peer_w:
+        loss = loss + peer_w * ff.peer_norm_loss(y_pos)
+    return loss
+
+
+def _make_seed_chapter(batch, epochs, theta):
+    @jax.jit
+    def run(lp, opt, x_pos, x_neg, lrs, key):
+        n = x_pos.shape[0]
+        n_batches = n // batch
+
+        def epoch_body(carry, ei):
+            lp, opt, step = carry
+            perm = jax.random.permutation(jax.random.fold_in(key, ei), n)
+
+            def batch_body(carry, bi):
+                lp, opt, step = carry
+                idx = jax.lax.dynamic_slice_in_dim(perm, bi * batch, batch)
+                g = jax.grad(_seed_layer_loss)(lp, x_pos[idx], x_neg[idx],
+                                               theta, 0.0)
+                step = step + 1
+                lp, opt = optim.adam_update(lp, g, opt, lr=lrs[ei],
+                                            step=step)
+                return (lp, opt, step), None
+
+            (lp, opt, step), _ = jax.lax.scan(
+                batch_body, (lp, opt, step), jnp.arange(n_batches))
+            return (lp, opt, step), None
+
+        (lp, opt, _), _ = jax.lax.scan(
+            epoch_body, (lp, opt, jnp.zeros((), jnp.int32)),
+            jnp.arange(epochs))
+        return lp, opt
+    return run
+
+
+# ---------------------------------------------------------------------------
+# Jaxpr matmul-dispatch counter
+# ---------------------------------------------------------------------------
+
+def _count_dots(jaxpr):
+    n = 0
+    for eqn in jaxpr.eqns:
+        if eqn.primitive.name == "dot_general":
+            n += 1
+        for v in eqn.params.values():
+            if isinstance(v, jax.core.ClosedJaxpr):
+                n += _count_dots(v.jaxpr)
+            elif isinstance(v, jax.core.Jaxpr):
+                n += _count_dots(v)
+            elif isinstance(v, (tuple, list)):
+                for vv in v:
+                    if isinstance(vv, jax.core.ClosedJaxpr):
+                        n += _count_dots(vv.jaxpr)
+                    elif isinstance(vv, jax.core.Jaxpr):
+                        n += _count_dots(vv)
+    return n
+
+
+def matmul_dispatches_per_step(K, N, batch):
+    """dot_general count in ONE gradient step, seed vs stacked-ref."""
+    lp = {"w": jnp.zeros((K, N)), "b": jnp.zeros((N,))}
+    xp = jnp.zeros((batch, K))
+    xb = jnp.zeros((2 * batch, K))
+    seed = _count_dots(jax.make_jaxpr(
+        lambda lp, a, b: jax.grad(_seed_layer_loss)(lp, a, b, THETA, 0.0)
+    )(lp, xp, xp).jaxpr)
+    stacked = _count_dots(jax.make_jaxpr(
+        lambda lp, x: jax.grad(ff_mlp._ff_layer_loss)(lp, x, THETA, 0.0,
+                                                      "ref")
+    )(lp, xb).jaxpr)
+    return seed, stacked
+
+
+# ---------------------------------------------------------------------------
+# Timing
+# ---------------------------------------------------------------------------
+
+def _time_chapter(run_fn, make_args, repeats):
+    run_fn(*make_args())          # warmup/compile (donation-safe: fresh)
+    best = float("inf")
+    for _ in range(repeats):
+        args = make_args()
+        t0 = time.perf_counter()
+        out = run_fn(*args)
+        jax.block_until_ready(out)
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def bench_layer(key, K, N, *, n, batch, epochs, repeats, with_pallas=True):
+    kx, kn, kw, kt = jax.random.split(key, 4)
+    x_pos = jax.random.normal(kx, (n, K), jnp.float32)
+    x_neg = jax.random.normal(kn, (n, K), jnp.float32)
+    lrs = jnp.full((epochs,), 0.01, jnp.float32)
+    steps = (n // batch) * epochs
+
+    def fresh():
+        lp = {"w": jax.random.normal(kw, (K, N), jnp.float32) * K ** -0.5,
+              "b": jnp.zeros((N,), jnp.float32)}
+        return lp, optim.adam_init(lp)
+
+    out = {}
+    seed_run = _make_seed_chapter(batch, epochs, THETA)
+    t = _time_chapter(
+        seed_run, lambda: (*fresh(), x_pos, x_neg, lrs, kt), repeats)
+    out["seed_unfused"] = {"steps_per_sec": steps / t,
+                           "examples_per_sec": steps * batch / t}
+
+    impls = ("ref", "pallas") if with_pallas else ("ref",)
+    for impl in impls:
+        def run(lp, opt):
+            return ff_mlp.train_layer_chapter(
+                lp, opt, x_pos, x_neg, lrs, kt, batch=batch,
+                epochs=epochs, theta=THETA, peer_w=0.0, impl=impl)
+        t = _time_chapter(run, fresh, repeats)
+        name = "ref_stacked" if impl == "ref" else "pallas_fused"
+        out[name] = {"steps_per_sec": steps / t,
+                     "examples_per_sec": steps * batch / t}
+
+    base = out["seed_unfused"]["steps_per_sec"]
+    for name in ("ref_stacked", "pallas_fused"):
+        if name in out:
+            out[name]["speedup_vs_seed"] = out[name]["steps_per_sec"] / base
+    return out
+
+
+def grad_max_err(key, K, N, batch):
+    """Fused-kernel gradient vs the jax.grad-of-oracle gradient."""
+    kx, kw = jax.random.split(key)
+    xb = jax.random.normal(kx, (2 * batch, K), jnp.float32)
+    lp = {"w": jax.random.normal(kw, (K, N), jnp.float32) * K ** -0.5,
+          "b": jnp.full((N,), 0.1, jnp.float32)}
+    gp = jax.grad(ff_mlp._ff_layer_loss)(lp, xb, THETA, 0.1, "pallas")
+    gr = jax.grad(ff_mlp._ff_layer_loss)(lp, xb, THETA, 0.1, "ref")
+    return max(float(jnp.abs(gp[k] - gr[k]).max()) for k in ("w", "b"))
+
+
+def run(quick=True, out_path=None):
+    """Returns the result dict (also written to BENCH_ff_hotloop.json)."""
+    if out_path is None:
+        out_path = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                                os.pardir, "BENCH_ff_hotloop.json")
+    key = jax.random.PRNGKey(0)
+    n, batch, epochs, repeats = (1024, 64, 1, 3) if quick \
+        else (4096, 64, 2, 5)
+
+    seed_d, stacked_d = matmul_dispatches_per_step(
+        PAPER_SIZES[0], PAPER_SIZES[1], batch)
+    print(f"matmul dispatches per grad step: seed={seed_d} "
+          f"stacked={stacked_d}")
+
+    results = {
+        "config": {"n_train": n, "batch": batch, "epochs_per_chapter":
+                   epochs, "layer_sizes": list(PAPER_SIZES),
+                   "backend": jax.default_backend(),
+                   "pallas_interpret": jax.default_backend() != "tpu"},
+        "matmul_dispatches_per_step": {"seed_unfused": seed_d,
+                                       "stacked": stacked_d},
+        "layers": [],
+        "note": ("pallas timings are interpret-mode on non-TPU backends; "
+                 "dispatch counts + grad_max_err are the load-insensitive "
+                 "signals, steps/sec varies with container load"),
+    }
+
+    worst_err = 0.0
+    cache = {}
+    for i in range(len(PAPER_SIZES) - 1):
+        K, N = PAPER_SIZES[i], PAPER_SIZES[i + 1]
+        if (K, N) not in cache:
+            err = grad_max_err(jax.random.fold_in(key, i), K, N, batch)
+            timings = bench_layer(jax.random.fold_in(key, 100 + i), K, N,
+                                  n=n, batch=batch, epochs=epochs,
+                                  repeats=repeats)
+            cache[(K, N)] = (timings, err)
+        timings, err = cache[(K, N)]
+        worst_err = max(worst_err, err)
+        entry = {"layer": i, "K": K, "N": N, "grad_max_err_vs_oracle": err}
+        entry.update(timings)
+        results["layers"].append(entry)
+        sps = {k: v["steps_per_sec"] for k, v in timings.items()}
+        print(f"layer {i} ({K}->{N}): " + "  ".join(
+            f"{k}={v:.1f} steps/s" for k, v in sps.items())
+            + f"  grad_err={err:.2e}")
+
+    results["max_grad_err"] = worst_err
+    with open(out_path, "w") as f:
+        json.dump(results, f, indent=2)
+    print(f"wrote {os.path.normpath(out_path)} "
+          f"(max grad err {worst_err:.2e})")
+    return results

@@ -5,14 +5,24 @@ Sections (one per paper table/figure + framework-level):
   2. FF vs backprop on the synthetic LM (framework substrate)
   3. kernel validation sweep (Pallas vs oracle, interpret mode)
   4. roofline table from the dry-run records (if present)
+  5. FF hot-loop perf baseline (writes BENCH_ff_hotloop.json)
 
 ``--full`` runs the bigger paper-table configuration; default is the
-quick profile (~10 min on this CPU container).
+quick profile (~10 min on this CPU container). ``--only=<section>``
+selects one section — ``--only=ff_hotloop`` is the ``make bench-smoke``
+target. Exits non-zero if any kernel-vs-oracle max error exceeds
+``ERR_BUDGET`` so correctness regressions fail loudly in CI.
 """
 from __future__ import annotations
 
 import sys
 import time
+
+ERR_BUDGET = 1e-4
+
+
+SECTIONS = ("tables", "lm", "lm_schedules", "lm_negatives", "kernels",
+            "roofline", "ff_hotloop")
 
 
 def main(argv):
@@ -21,7 +31,12 @@ def main(argv):
     for a in argv:
         if a.startswith("--only="):
             only = a.split("=", 1)[1]
+    if only is not None and only not in SECTIONS:
+        print(f"unknown --only section {only!r}; "
+              f"expected one of {', '.join(SECTIONS)}")
+        sys.exit(2)
     t0 = time.time()
+    failures = []
 
     if only in (None, "tables"):
         print("\n##### 1. Paper tables 1-5 analogues #####")
@@ -49,14 +64,29 @@ def main(argv):
         print("\n##### 3. Kernel validation (Pallas interpret vs oracle) "
               "#####")
         from benchmarks import kernels as kbench
-        kbench.run()
+        worst = kbench.run()
+        if worst > ERR_BUDGET:
+            failures.append(f"kernel sweep max_err {worst:.2e} > "
+                            f"{ERR_BUDGET:.0e}")
 
     if only in (None, "roofline"):
         print("\n##### 4. Roofline (from dry-run records) #####")
         from benchmarks import roofline
         roofline.main()
 
+    if only in (None, "ff_hotloop"):
+        print("\n##### 5. FF hot-loop baseline (ref vs fused) #####")
+        from benchmarks import ff_hotloop
+        res = ff_hotloop.run(quick=not full)
+        if res["max_grad_err"] > ERR_BUDGET:
+            failures.append(f"ff_hotloop grad max_err "
+                            f"{res['max_grad_err']:.2e} > {ERR_BUDGET:.0e}")
+
     print(f"\nbenchmarks done in {time.time() - t0:.0f}s")
+    if failures:
+        for f in failures:
+            print(f"FAIL: {f}")
+        sys.exit(1)
 
 
 if __name__ == "__main__":

@@ -19,6 +19,7 @@ class FFMLPConfig:
     classifier: str = "goodness"    # goodness | softmax
     goodness_fn: str = "sumsq"      # sumsq | perf_opt (Performance-Optimized)
     peer_w: float = 0.0             # Hinton's peer-normalization weight
+    kernel_impl: str = "auto"       # auto | pallas | ref (ops.ff_dense)
     seed: int = 0
 
 

@@ -27,6 +27,7 @@ import numpy as np
 
 from repro import optim
 from repro.core import ff
+from repro.kernels import ops
 
 
 def _norm(x, eps=1e-8):
@@ -90,26 +91,35 @@ def forward_feats(layers, x):
 # Layer-local training (one chapter = C mini-epochs over all batches)
 # ---------------------------------------------------------------------------
 
-def _ff_layer_loss(lp, xb_pos, xb_neg, theta, peer_w):
-    """FF objective. Goodness = MEAN of squared activities with theta ~ 2
-    (equivalent to the paper's sum-of-squares with theta = 2*width; the
-    mean form keeps one theta valid across layer widths)."""
-    y_pos = layer_apply(lp, xb_pos)
-    y_neg = layer_apply(lp, xb_neg)
-    loss = ff.ff_loss(ff.mean_goodness(y_pos), ff.mean_goodness(y_neg),
-                      theta)
+def _ff_layer_loss(lp, xb, theta, peer_w, impl="auto"):
+    """FF objective over a stacked [pos; neg] batch xb: (2B, K).
+
+    Goodness = MEAN of squared activities with theta ~ 2 (equivalent to
+    the paper's sum-of-squares with theta = 2*width; the mean form keeps
+    one theta valid across layer widths). Stacking pos and neg into ONE
+    (2B, K) matmul halves the kernel dispatches of the old two-pass form
+    and doubles MXU occupancy; the goodness vector is split afterwards.
+    ``impl`` selects the fused Pallas kernel vs the jnp oracle
+    (repro.kernels.ops.ff_dense).
+    """
+    y, g = ops.ff_dense(xb, lp["w"], lp["b"], impl=impl)
+    g = g / y.shape[-1]                       # sum-of-squares -> mean
+    half = xb.shape[0] // 2
+    loss = ff.ff_loss(g[:half], g[half:], theta)
     if peer_w:
-        loss = loss + peer_w * ff.peer_norm_loss(y_pos)
+        loss = loss + peer_w * ff.peer_norm_loss(y[:half])
     return loss
 
 
 @functools.partial(jax.jit, static_argnames=("batch", "epochs", "theta",
-                                             "peer_w"))
+                                             "peer_w", "impl"),
+                   donate_argnums=(0, 1))
 def train_layer_chapter(lp, opt, x_pos, x_neg, lrs, key, *, batch, epochs,
-                        theta, peer_w=0.0):
+                        theta, peer_w=0.0, impl="auto"):
     """Trains one layer for `epochs` mini-epochs. x_pos/x_neg are this
     layer's (already normalized) inputs over the whole train set.
-    lrs: (epochs,) learning rate per mini-epoch (cooldown-aware)."""
+    lrs: (epochs,) learning rate per mini-epoch (cooldown-aware).
+    lp/opt are donated: their buffers are reused for the outputs."""
     n = x_pos.shape[0]
     n_batches = n // batch
 
@@ -120,8 +130,8 @@ def train_layer_chapter(lp, opt, x_pos, x_neg, lrs, key, *, batch, epochs,
         def batch_body(carry, bi):
             lp, opt, step = carry
             idx = jax.lax.dynamic_slice_in_dim(perm, bi * batch, batch)
-            g = jax.grad(_ff_layer_loss)(lp, x_pos[idx], x_neg[idx],
-                                         theta, peer_w)
+            xb = jnp.concatenate([x_pos[idx], x_neg[idx]], axis=0)
+            g = jax.grad(_ff_layer_loss)(lp, xb, theta, peer_w, impl)
             step = step + 1
             lp, opt = optim.adam_update(lp, g, opt, lr=lrs[ei], step=step)
             return (lp, opt, step), None
@@ -144,11 +154,13 @@ def _perf_opt_loss(lp_and_head, xb, yb):
         -jax.nn.log_softmax(logits)[jnp.arange(xb.shape[0]), yb])
 
 
-@functools.partial(jax.jit, static_argnames=("batch", "epochs"))
+@functools.partial(jax.jit, static_argnames=("batch", "epochs"),
+                   donate_argnums=(0, 1, 2, 3))
 def train_layer_chapter_perf_opt(lp, head, opt, opt_h, x, y, lrs, key, *,
                                  batch, epochs):
     """Performance-Optimized goodness (paper §4.4): train (layer, local
-    softmax head) with two-layer backprop; no negative data."""
+    softmax head) with two-layer backprop; no negative data.
+    lp/head/opt/opt_h are donated."""
     n = x.shape[0]
     n_batches = n // batch
 
@@ -182,9 +194,11 @@ def _head_loss(head, feats, y):
     return jnp.mean(-jax.nn.log_softmax(logits)[jnp.arange(y.shape[0]), y])
 
 
-@functools.partial(jax.jit, static_argnames=("batch", "epochs"))
+@functools.partial(jax.jit, static_argnames=("batch", "epochs"),
+                   donate_argnums=(0, 1))
 def train_head_chapter(head, opt, feats, y, lrs, key, *, batch, epochs):
-    """Softmax head on concatenated normalized feats of layers 2..L."""
+    """Softmax head on concatenated normalized feats of layers 2..L.
+    head/opt are donated."""
     n = feats.shape[0]
     n_batches = n // batch
 
@@ -215,27 +229,36 @@ def train_head_chapter(head, opt, feats, y, lrs, key, *, batch, epochs):
 # Prediction / evaluation
 # ---------------------------------------------------------------------------
 
-@jax.jit
-def accumulated_goodness(layers_params, x):
+@functools.partial(jax.jit, static_argnames=("impl",))
+def accumulated_goodness(layers_params, x, impl="auto"):
     """Goodness of layers 2..L (all but first), summed. x already
-    label-overlaid. Returns (B,)."""
+    label-overlaid. Returns (B,). Runs on the fused kernel path: each
+    layer is one ff_dense dispatch computing activation AND goodness."""
     h = x
     total = jnp.zeros((x.shape[0],), jnp.float32)
     skip_first = len(layers_params) > 1
     for i, lp in enumerate(layers_params):
-        h = layer_apply(lp, _norm(h))
+        y, g = ops.ff_dense(_norm(h), lp["w"], lp["b"], impl=impl)
         if i >= 1 or not skip_first:
-            total = total + ff.mean_goodness(h)
+            total = total + g / y.shape[-1]
+        h = y
     return total
 
 
-def goodness_class_scores(params, x, num_classes):
-    """(B, C) accumulated-goodness score per candidate label."""
-    def per_class(c):
-        lab = jnp.full((x.shape[0],), c, jnp.int32)
-        xc = ff.overlay_label(x, lab, num_classes)
-        return accumulated_goodness(params["layers"], xc)
-    return jax.vmap(per_class)(jnp.arange(num_classes)).T
+@functools.partial(jax.jit, static_argnames=("num_classes", "impl"))
+def goodness_class_scores(params, x, num_classes, impl="auto"):
+    """(B, C) accumulated-goodness score per candidate label.
+
+    All C label overlays are stacked into one (C*B, D) batch, so the
+    whole prediction sweep is ONE fused dispatch per layer instead of a
+    vmap of C separate layer stacks."""
+    B, D = x.shape
+    xs = jnp.broadcast_to(x[None], (num_classes, B, D)).reshape(
+        num_classes * B, D)
+    labels = jnp.repeat(jnp.arange(num_classes), B)
+    xc = ff.overlay_label(xs, labels, num_classes)
+    scores = accumulated_goodness(params["layers"], xc, impl=impl)
+    return scores.reshape(num_classes, B).T
 
 
 @jax.jit
@@ -261,9 +284,9 @@ def perf_opt_scores(params, x, last_only=False):
     return total
 
 
-def predict(params, x, num_classes, mode="goodness"):
+def predict(params, x, num_classes, mode="goodness", impl="auto"):
     if mode == "goodness":
-        scores = goodness_class_scores(params, x, num_classes)
+        scores = goodness_class_scores(params, x, num_classes, impl=impl)
     elif mode in ("perf_opt_all", "perf_opt_last"):
         xn = ff.overlay_neutral(x, num_classes)
         scores = perf_opt_scores(params, xn,
@@ -275,10 +298,11 @@ def predict(params, x, num_classes, mode="goodness"):
     return jnp.argmax(scores, axis=1)
 
 
-def accuracy(params, x, y, num_classes, mode="goodness", chunk=2000):
+def accuracy(params, x, y, num_classes, mode="goodness", chunk=2000,
+             impl="auto"):
     correct = 0
     for i in range(0, len(x), chunk):
         pred = predict(params, jnp.asarray(x[i:i + chunk]), num_classes,
-                       mode)
+                       mode, impl=impl)
         correct += int(jnp.sum(pred == jnp.asarray(y[i:i + chunk])))
     return correct / len(x)

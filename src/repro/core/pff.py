@@ -102,13 +102,23 @@ def train_ff_mlp(cfg, task: data_lib.ImageTask, *, probe_every=0,
     x_all = jnp.asarray(task.x_train)
     y_all = jnp.asarray(task.y_train)
     perf_opt = cfg.goodness_fn == "perf_opt"
+    impl = getattr(cfg, "kernel_impl", "auto")
 
-    # initial negatives
+    # Hoisted out of the chapter loop: label overlays and the layer-0
+    # length-normalization are chapter-invariant (the positive overlay
+    # never changes; the negative one changes only on regeneration), so
+    # recomputing them every chapter x layer was pure waste.
     kneg = jax.random.fold_in(key, 999)
     if not perf_opt:
-        x_pos_base = ff.overlay_label(x_all, y_all, cfg.num_classes)
-        x_neg_base = _make_negatives(kneg, cfg, params, x_all, y_all,
-                                     "random")
+        # only the normalized forms are kept — the raw overlays would be
+        # ~190 MB of dead weight each at MNIST scale
+        xp0 = ff_mlp._norm(ff.overlay_label(x_all, y_all, cfg.num_classes))
+        xn0 = ff_mlp._norm(_make_negatives(kneg, cfg, params, x_all, y_all,
+                                           "random"))
+    if perf_opt or cfg.classifier == "softmax":
+        x_neutral = ff.overlay_neutral(x_all, cfg.num_classes)
+        if perf_opt:
+            xk0 = ff_mlp._norm(x_neutral)
 
     for chapter in range(S):
         if node_data is not None:
@@ -124,12 +134,10 @@ def train_ff_mlp(cfg, task: data_lib.ImageTask, *, probe_every=0,
         kc = jax.random.fold_in(key, chapter)
 
         if perf_opt:
-            x_in = x_all if idx is None else x_all[idx]
+            xk = xk0 if idx is None else xk0[idx]
             y_in = y_all if idx is None else y_all[idx]
-            x_in = ff.overlay_neutral(x_in, cfg.num_classes)
             for k in range(n_layers):
                 t0 = time.perf_counter()
-                xk = ff_mlp._norm(x_in)
                 lp, lh, o, oh = ff_mlp.train_layer_chapter_perf_opt(
                     params["layers"][k], params["local_heads"][k],
                     opt["layers"][k], opt["local_heads"][k],
@@ -139,33 +147,35 @@ def train_ff_mlp(cfg, task: data_lib.ImageTask, *, probe_every=0,
                 params["layers"][k] = lp
                 params["local_heads"][k] = lh
                 opt["layers"][k], opt["local_heads"][k] = o, oh
-                x_in = ff_mlp.layer_apply(lp, ff_mlp._norm(x_in))
+                if k + 1 < n_layers:
+                    xk = ff_mlp._norm(ff_mlp.layer_apply(lp, xk))
                 records.append(TaskRecord(
                     "train", k, chapter, time.perf_counter() - t0))
         else:
-            x_pos = x_pos_base if idx is None else x_pos_base[idx]
-            x_neg = x_neg_base if idx is None else x_neg_base[idx]
+            # xp/xn carry the normalized inputs of the current layer
+            xp = xp0 if idx is None else xp0[idx]
+            xn = xn0 if idx is None else xn0[idx]
             for k in range(n_layers):
                 t0 = time.perf_counter()
-                xp, xn = ff_mlp._norm(x_pos), ff_mlp._norm(x_neg)
                 lp, o = ff_mlp.train_layer_chapter(
                     params["layers"][k], opt["layers"][k], xp, xn, lrs,
                     jax.random.fold_in(kc, k), batch=cfg.batch_size,
-                    epochs=C, theta=cfg.theta, peer_w=cfg.peer_w)
+                    epochs=C, theta=cfg.theta, peer_w=cfg.peer_w,
+                    impl=impl)
                 jax.block_until_ready(lp)
                 params["layers"][k] = lp
                 opt["layers"][k] = o
                 # propagate data through the freshly-trained layer
-                x_pos = ff_mlp.layer_apply(lp, xp)
-                x_neg = ff_mlp.layer_apply(lp, xn)
+                if k + 1 < n_layers:
+                    xp = ff_mlp._norm(ff_mlp.layer_apply(lp, xp))
+                    xn = ff_mlp._norm(ff_mlp.layer_apply(lp, xn))
                 records.append(TaskRecord(
                     "train", k, chapter, time.perf_counter() - t0))
 
         # softmax head (trained alongside, layer-local — paper §3)
         if cfg.classifier == "softmax":
             t0 = time.perf_counter()
-            xn_all = ff.overlay_neutral(
-                x_all if idx is None else x_all[idx], cfg.num_classes)
+            xn_all = x_neutral if idx is None else x_neutral[idx]
             feats = ff_mlp.softmax_feats(params["layers"], xn_all)
             params["head"], opt["head"] = ff_mlp.train_head_chapter(
                 params["head"], opt["head"], feats,
@@ -182,33 +192,36 @@ def train_ff_mlp(cfg, task: data_lib.ImageTask, *, probe_every=0,
             scores = None
             if cfg.neg_mode == "adaptive":
                 scores = _class_scores_chunked(params, x_all, cfg)
-            x_neg_base = _make_negatives(
+            xn0 = ff_mlp._norm(_make_negatives(
                 jax.random.fold_in(kneg, chapter), cfg, params,
-                x_all, y_all, cfg.neg_mode, scores)
-            jax.block_until_ready(x_neg_base)
+                x_all, y_all, cfg.neg_mode, scores))
+            jax.block_until_ready(xn0)
             records.append(TaskRecord(
                 "neg_gen", -1, chapter, time.perf_counter() - t0))
 
         if probe_every and (chapter + 1) % probe_every == 0:
             acc = ff_mlp.accuracy(params, task.x_test, task.y_test,
-                                  cfg.num_classes, cfg.classifier)
+                                  cfg.num_classes, cfg.classifier,
+                                  impl=impl)
             history.append((chapter + 1, acc))
             if verbose:
                 print(f"  chapter {chapter + 1}/{S}: test acc {acc:.4f}")
 
     mode = "perf_opt_all" if perf_opt else cfg.classifier
     test_acc = ff_mlp.accuracy(params, task.x_test, task.y_test,
-                               cfg.num_classes, mode)
+                               cfg.num_classes, mode, impl=impl)
     train_acc = ff_mlp.accuracy(params, task.x_train[:2000],
-                                task.y_train[:2000], cfg.num_classes, mode)
+                                task.y_train[:2000], cfg.num_classes, mode,
+                                impl=impl)
     return TrainResult(params, records, test_acc, train_acc, cfg, history)
 
 
 def _class_scores_chunked(params, x, cfg, chunk=2000):
+    impl = getattr(cfg, "kernel_impl", "auto")
     outs = []
     for i in range(0, x.shape[0], chunk):
         outs.append(ff_mlp.goodness_class_scores(
-            params, x[i:i + chunk], cfg.num_classes))
+            params, x[i:i + chunk], cfg.num_classes, impl=impl))
     return jnp.concatenate(outs, axis=0)
 
 

@@ -3,13 +3,20 @@
   ff_dense        — the FF-MLP hot loop: fused matmul -> ReLU -> goodness
                     (one pass computes the layer output AND the per-row
                     sum-of-squares the FF loss needs).
+  ff_dense_vjp    — custom_vjp around ff_dense with a fused Pallas
+                    backward kernel (dw/db/dx from resident tiles), so
+                    jax.grad of the FF objective stays on the fused path.
   flash_attention — blockwise online-softmax attention (GQA / causal /
                     sliding-window) for the transformer archs.
   mamba2_ssd      — chunked SSD dual-form scan (intra-chunk quadratic +
                     carried state) for Mamba-2.
 
 Each kernel ships as <name>.py (pl.pallas_call + BlockSpec), ops.py
-(jit'd dispatch wrapper), ref.py (pure-jnp oracle). On CPU the kernels
-run under interpret=True; the model code calls the pure-JAX paths by
-default and the kernels are validated against them in tests/.
+(jit'd dispatch wrapper), ref.py (pure-jnp oracle). The FF-MLP model
+code now calls the fused path for real: ``repro.core.ff_mlp`` trains and
+predicts through ``ops.ff_dense`` with a config-driven
+``kernel_impl: auto | pallas | ref`` switch (auto = Pallas on TPU,
+oracle on CPU; Pallas runs under interpret=True off-TPU). The kernels
+are validated against the oracles in tests/ and gated to <= 1e-4 by
+``benchmarks/run.py``.
 """

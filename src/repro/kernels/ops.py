@@ -1,15 +1,18 @@
 """Dispatch layer: TPU -> Pallas kernel, anything else -> jnp oracle.
 
 Model code imports from here; tests cross-validate both paths. On this
-CPU container the Pallas path runs in interpret mode (set
-``force_pallas=True``); on a real TPU it compiles to Mosaic.
+CPU container the Pallas path runs in interpret mode; on a real TPU it
+compiles to Mosaic. ``ff_dense`` is fully differentiable on both paths
+(the Pallas path carries a fused custom_vjp backward kernel) and is the
+engine of the FF-MLP training hot loop — select the path with
+``impl="auto" | "pallas" | "ref"`` (``FFMLPConfig.kernel_impl``).
 """
 from __future__ import annotations
 
 import jax
 
 from repro.kernels import ref
-from repro.kernels.ff_dense import ff_dense as _ff_dense_pallas
+from repro.kernels.ff_dense_vjp import ff_dense_vjp as _ff_dense_vjp
 from repro.kernels.flash_attention import flash_attention as _flash_pallas
 from repro.kernels.mamba2_ssd import mamba2_ssd as _ssd_pallas
 
@@ -18,9 +21,23 @@ def _on_tpu():
     return jax.default_backend() == "tpu"
 
 
-def ff_dense(x, w, b, *, force_pallas=False):
-    if _on_tpu() or force_pallas:
-        return _ff_dense_pallas(x, w, b, interpret=not _on_tpu())
+def ff_dense(x, w, b, *, impl="auto", force_pallas=False):
+    """Fused (or reference) y = relu(x @ w + b), g = sum(y^2, -1).
+
+    impl: "auto" picks Pallas on TPU and the jnp oracle elsewhere;
+    "pallas" forces the fused kernel (interpret mode off-TPU); "ref"
+    forces the oracle. ``force_pallas=True`` is the legacy spelling of
+    impl="pallas". Differentiable under jax.grad on every path.
+    """
+    if force_pallas:
+        impl = "pallas"
+    if impl == "auto":
+        impl = "pallas" if _on_tpu() else "ref"
+    if impl == "pallas":
+        return _ff_dense_vjp(x, w, b, not _on_tpu())
+    if impl != "ref":
+        raise ValueError(f"unknown ff_dense impl {impl!r}; "
+                         "expected auto | pallas | ref")
     return ref.ff_dense_ref(x, w, b)
 
 

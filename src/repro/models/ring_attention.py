@@ -34,6 +34,25 @@ import functools
 import jax
 import jax.numpy as jnp
 
+# Compat: jax >= 0.6 exposes jax.shard_map (kw: check_vma); this
+# container's 0.4.x only has the experimental one (kw: check_rep).
+if hasattr(jax, "shard_map"):
+    _shard_map = jax.shard_map
+    _CHECK_KW = "check_vma"
+else:
+    from jax.experimental.shard_map import shard_map as _shard_map
+    _CHECK_KW = "check_rep"
+
+
+def _axis_size(axis):
+    """Static mesh-axis size, usable for Python-level loop bounds.
+    jax >= 0.5 has jax.lax.axis_size; 0.4.x exposes it via axis_frame."""
+    if hasattr(jax.lax, "axis_size"):
+        return jax.lax.axis_size(axis)
+    frame = jax.core.axis_frame(axis)
+    return getattr(frame, "size", frame)
+
+
 NEG_INF = -1e30
 
 
@@ -53,7 +72,7 @@ def ring_attention_local(q, k, v, *, axis, causal=True):
     (B, Sk_local, KV, hd), sequence sharded over `axis` in device
     order. Returns (B, Sq_local, H, hd).
     """
-    P = jax.lax.axis_size(axis)
+    P = _axis_size(axis)
     idx = jax.lax.axis_index(axis)
     B, Sq, H, hd = q.shape
     _, Sk, KV, _ = k.shape
@@ -99,10 +118,10 @@ def ring_attention(q, k, v, *, mesh, axis="model", causal=True,
     Pspec = jax.sharding.PartitionSpec
     seq_spec = Pspec(batch_axis, axis, None, None)
 
-    fn = jax.shard_map(
+    fn = _shard_map(
         functools.partial(ring_attention_local, axis=axis, causal=causal),
         mesh=mesh,
         in_specs=(seq_spec, seq_spec, seq_spec),
         out_specs=seq_spec,
-        check_vma=False)
+        **{_CHECK_KW: False})
     return fn(q, k, v)

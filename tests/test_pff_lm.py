@@ -62,9 +62,12 @@ def test_chapter_schedule_records_and_learning(setup):
         cfg, data_iter, chapters=3, steps_per_chapter=3, lr=3e-3)
     repeat = cfg.groups[0][1]
     assert len(records) == 3 * repeat
-    # losses drop within blocks over chapters (block 0's loss sequence)
-    b0 = [losses[c * repeat] for c in range(3)]
-    assert b0[-1] < b0[0]
+    # losses drop over chapters. Comparing two single (chapter, block)
+    # samples is too noisy (block 0 flaked by ~0.025); compare the mean
+    # loss of the last chapter against the first instead.
+    first = float(np.mean(losses[:repeat]))
+    last = float(np.mean(losses[-repeat:]))
+    assert last < first
     # records drive the PFF simulator
     sim = pff.simulate_schedule(records, "all_layers", 2)
     assert sim.makespan > 0 and sim.speedup >= 1.0
