@@ -1,6 +1,6 @@
 PY := PYTHONPATH=src python
 
-.PHONY: test bench bench-smoke
+.PHONY: test bench bench-smoke pff-exec-smoke
 
 test:
 	$(PY) -m pytest -q
@@ -11,5 +11,16 @@ bench-smoke:
 	$(PY) -m benchmarks.run --only=ff_hotloop
 	$(PY) -m benchmarks.run --only=kernels
 
+# Real multi-device PFF executor on 4 faked host devices: measured vs
+# simulator-predicted speedup (BENCH_pff_exec.json) + weight-stream
+# bit-equality gate vs the sequential trainer. Exits non-zero if the
+# executor's weights diverge.
+pff-exec-smoke:
+	XLA_FLAGS=--xla_force_host_platform_device_count=4 \
+		$(PY) -m benchmarks.run --only=pff_exec
+
+# XLA_FLAGS: the pff_exec section needs 4 faked host devices (the other
+# sections are device-count agnostic; tier-1 is green at 1 and 4).
 bench:
-	$(PY) -m benchmarks.run
+	XLA_FLAGS=--xla_force_host_platform_device_count=4 \
+		$(PY) -m benchmarks.run

@@ -128,7 +128,9 @@ def matmul_dispatches_per_step(K, N, batch):
 # ---------------------------------------------------------------------------
 
 def _time_chapter(run_fn, make_args, repeats):
-    run_fn(*make_args())          # warmup/compile (donation-safe: fresh)
+    # warmup/compile (donation-safe: fresh args); block so pending
+    # warm-up device work cannot leak into the first timed repeat
+    jax.block_until_ready(run_fn(*make_args()))
     best = float("inf")
     for _ in range(repeats):
         args = make_args()

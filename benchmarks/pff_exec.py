@@ -1,0 +1,169 @@
+"""Measured vs simulator-predicted PFF: the real executor on host devices.
+
+The repo's central claim used to be SIMULATED only — ``core/pff.py``
+times the canonical chapter schedule and replays the timings through an
+event-driven simulator. This benchmark runs the same schedules for REAL
+through ``core/pff_exec.py`` on an actual ``jax.devices()`` set and
+writes measured makespan/speedup/utilization NEXT TO the simulator's
+prediction into ``BENCH_pff_exec.json`` for N ∈ {1, 2, 4} nodes
+(all_layers, plus single_layer and federated at N=4).
+
+Protocol per row:
+  1. a profiled executor run (blocks after every task) — doubles as the
+     per-device compile warm-up AND yields per-node busy-seconds,
+  2. a non-profiled run on warm caches — its wall-clock from first
+     dispatch to last-weight-ready is the measured makespan,
+  3. the simulator's prediction replaying the canonical trainer's
+     task timings under the same node assignment.
+Measured speedup = measured sequential (N=1) makespan / row makespan.
+Utilization_est = profiled busy-seconds / (N * measured makespan).
+
+The all_layers rows double as a correctness gate: the executor's final
+weights must be BIT-IDENTICAL to the sequential trainer's
+(``benchmarks/run.py`` exits non-zero otherwise).
+
+Caveat for CPU containers: the faked host devices share the machine's
+cores (this box has very few), so measured speedup is bounded by the
+core budget, not by the schedule — the honest comparison is measured
+makespan vs simulator prediction under the SAME contention. On real
+multi-device hardware the simulator's speedup is the one to approach.
+Needs >= 4 devices: export XLA_FLAGS=--xla_force_host_platform_device_count=4
+before jax is imported (``make pff-exec-smoke`` does; this module also
+sets it when imported before jax).
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+if "jax" not in sys.modules:                       # pragma: no cover
+    os.environ.setdefault(
+        "XLA_FLAGS", "--xla_force_host_platform_device_count=4")
+
+import jax
+import jax.numpy as jnp
+
+from repro import data as data_lib
+from repro.configs.ff_mlp import FFMLPConfig
+from repro.core import pff, pff_exec
+
+NODE_COUNTS = (1, 2, 4)
+
+
+def _measure(cfg, task, schedule, num_nodes, devices):
+    ex = pff_exec.PFFExecutor(cfg, task, schedule, num_nodes,
+                              devices=devices)
+    prof = ex.run(profile=True)       # compile warm-up + busy estimate
+    timed = ex.run(profile=False)     # warm-cache makespan
+    # busy estimate from the profiled run, but with each task's duration
+    # replaced by its (kind, layer) median — the same compile-outlier
+    # smoothing simulate_schedule applies to the canonical records (the
+    # profiled run is cold, so raw sums overstate busy time).
+    durs = pff.task_durations(prof.records)
+    busy = sum(durs[(r.kind, r.layer)] for r in prof.records)
+    return timed, {
+        "makespan_s": timed.makespan,
+        "busy_s_profiled": busy,
+        # clamped: blocked per-task profiling pays a host sync per task
+        # that the pipelined run does not, so the raw ratio can exceed
+        # 1 on a contended CPU host — busy_s_profiled keeps the raw sum
+        "utilization_est": min(1.0, busy / (num_nodes * timed.makespan))
+        if timed.makespan else 1.0,
+        "test_acc": timed.test_acc,
+    }
+
+
+def run(quick=True, out_path=None):
+    if out_path is None:
+        out_path = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                                os.pardir, "BENCH_pff_exec.json")
+    n_train, splits, epochs, sizes = (
+        (1000, 8, 8, (784, 256, 256, 256, 256)) if quick
+        else (4000, 16, 16, (784, 512, 512, 512, 512)))
+    # n_train deliberately NOT divisible by batch: the tail-batch path
+    # stays exercised in every CI run.
+    cfg = FFMLPConfig(layer_sizes=sizes, epochs=epochs, splits=splits,
+                      neg_mode="random", classifier="goodness",
+                      batch_size=64, seed=0)
+    task = data_lib.mnist_like(n_train=n_train, n_test=500)
+    devices = jax.devices()
+    n_dev = len(devices)
+    print(f"devices: {n_dev} x {devices[0].platform}")
+
+    # canonical sequential trainer: weight-stream oracle + task timings
+    ref = pff.train_ff_mlp(cfg, task)
+    print(f"sequential trainer: test acc {ref.test_acc:.4f}")
+
+    results = {
+        "config": {"n_train": n_train, "splits": splits, "epochs": epochs,
+                   "layer_sizes": list(sizes),
+                   "batch_size": cfg.batch_size,
+                   "backend": jax.default_backend(), "devices": n_dev,
+                   "cpu_count": os.cpu_count()},
+        "note": ("measured speedup on a CPU container is bounded by the "
+                 "host core budget shared across the faked devices; the "
+                 "simulator predicts the schedule's own ceiling. "
+                 "utilization_est divides profiled (contention-free) "
+                 "busy-seconds by the overlapped makespan."),
+        "rows": [],
+    }
+    failures = []
+
+    seq_measured = None
+    rows = [("all_layers", n) for n in NODE_COUNTS]
+    rows += [("single_layer", 4), ("federated", 4)]
+    for schedule, n in rows:
+        sim = pff.simulate_schedule(ref.records, schedule, n)
+        row = {"schedule": schedule, "nodes": n,
+               "sim": {"makespan_s": sim.makespan, "speedup": sim.speedup,
+                       "utilization": sim.utilization}}
+        if n > n_dev:
+            row["measured"] = None
+            row["note"] = (f"needs {n} devices, found {n_dev} — set "
+                           "XLA_FLAGS=--xla_force_host_platform_device_"
+                           f"count={n} (see make pff-exec-smoke)")
+        else:
+            timed, measured = _measure(
+                cfg, task, "sequential" if n == 1 else schedule, n,
+                devices)
+            if n == 1:
+                seq_measured = measured["makespan_s"]
+            if seq_measured:
+                measured["speedup"] = seq_measured / measured["makespan_s"]
+            row["measured"] = measured
+            if schedule == "federated":
+                row["note"] = ("federated trains 1/N-size node-local "
+                               "shards, so measured tasks are smaller "
+                               "than the full-dataset timings the "
+                               "simulator replays — measured speedup "
+                               "includes that data reduction, sim "
+                               "speedup does not")
+            if schedule == "all_layers":
+                bit = pff_exec.params_bit_equal(ref.params, timed.params)
+                row["weights_bit_exact_vs_sequential"] = bit
+                if not bit:
+                    failures.append(f"{schedule} N={n}: executor weight "
+                                    "stream diverged from the sequential "
+                                    "trainer")
+        results["rows"].append(row)
+        m = row["measured"]
+        print(f"{schedule:>13} N={n}: sim speedup {sim.speedup:5.2f}x "
+              f"util {sim.utilization:.2f}" +
+              (f" | measured makespan {m['makespan_s']:6.2f}s "
+               f"speedup {m.get('speedup', 1.0):5.2f}x "
+               f"util_est {m['utilization_est']:.2f}"
+               if m else " | not measured (too few devices)"))
+
+    results["failures"] = failures
+    if n_dev < max(NODE_COUNTS) and os.path.exists(out_path):
+        # degraded run (too few devices): keep the committed multi-node
+        # baseline instead of clobbering it with unmeasured rows
+        print(f"only {n_dev} device(s) — keeping existing "
+              f"{os.path.normpath(out_path)} (run `make pff-exec-smoke` "
+              "or set XLA_FLAGS for the full measurement)")
+        return results
+    with open(out_path, "w") as f:
+        json.dump(results, f, indent=2)
+    print(f"wrote {os.path.normpath(out_path)}")
+    return results

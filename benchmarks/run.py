@@ -22,7 +22,7 @@ ERR_BUDGET = 1e-4
 
 
 SECTIONS = ("tables", "lm", "lm_schedules", "lm_negatives", "kernels",
-            "roofline", "ff_hotloop")
+            "roofline", "ff_hotloop", "pff_exec")
 
 
 def main(argv):
@@ -81,6 +81,13 @@ def main(argv):
         if res["max_grad_err"] > ERR_BUDGET:
             failures.append(f"ff_hotloop grad max_err "
                             f"{res['max_grad_err']:.2e} > {ERR_BUDGET:.0e}")
+
+    if only in (None, "pff_exec"):
+        print("\n##### 6. Real PFF executor: measured vs simulated "
+              "(multi-device) #####")
+        from benchmarks import pff_exec as pexec_bench
+        res = pexec_bench.run(quick=not full)
+        failures.extend(res["failures"])
 
     print(f"\nbenchmarks done in {time.time() - t0:.0f}s")
     if failures:

@@ -52,7 +52,7 @@ def ff_loss_masked(g, is_pos, theta):
     return jnp.mean(per)
 
 
-def peer_norm_loss(y, momentum_mean=None):
+def peer_norm_loss(y):
     """Hinton's peer normalization: push mean activities toward their
     average (prevents dead/hyperactive units). y: (B, D) post-ReLU."""
     mean_act = jnp.mean(y.astype(jnp.float32), axis=0)      # (D,)
@@ -100,12 +100,19 @@ def adaptive_wrong_labels(class_scores, labels, key=None, temp=1.0):
     frequency shortcuts instead of image-label agreement).
     """
     B, C = class_scores.shape
-    masked = jnp.where(jax.nn.one_hot(labels, C, dtype=bool),
-                       -jnp.inf, class_scores)
+    true_hot = jax.nn.one_hot(labels, C, dtype=bool)
+    masked = jnp.where(true_hot, -jnp.inf, class_scores)
     if key is None:
         return jnp.argmax(masked, axis=1).astype(labels.dtype)
-    mu = jnp.mean(class_scores, axis=1, keepdims=True)
-    sd = jnp.std(class_scores, axis=1, keepdims=True) + 1e-6
+    # z-score over the WRONG-label columns only: including the masked
+    # true-label column would bias mu/sd by the true label's magnitude
+    # (typically the row maximum), flattening the sampling distribution
+    # exactly where the model is confident.
+    wrong = jnp.where(true_hot, 0.0, class_scores)
+    mu = jnp.sum(wrong, axis=1, keepdims=True) / (C - 1)
+    var = jnp.sum(jnp.where(true_hot, 0.0, jnp.square(class_scores - mu)),
+                  axis=1, keepdims=True) / (C - 1)
+    sd = jnp.sqrt(var) + 1e-6
     z = jnp.where(jnp.isfinite(masked), (masked - mu) / sd, -jnp.inf)
     return jax.random.categorical(key, z / temp, axis=1).astype(
         labels.dtype)

@@ -91,6 +91,32 @@ def forward_feats(layers, x):
 # Layer-local training (one chapter = C mini-epochs over all batches)
 # ---------------------------------------------------------------------------
 
+def _num_batches(n, batch):
+    """Batches per mini-epoch, tail included (ceil division)."""
+    return -(-n // batch)
+
+
+def _epoch_perm(key, ei, n, batch):
+    """Shuffled sample order for mini-epoch ``ei``, length padded to a
+    whole number of batches by WRAPPING the permutation.
+
+    The old ``n // batch`` truncation silently dropped up to ``batch-1``
+    samples every mini-epoch — which especially bites Federated PFF,
+    whose per-node shards (e.g. 15000/4 nodes) are rarely divisible by
+    the batch size. Wrapping guarantees every sample is consumed at
+    least once per mini-epoch (the leading samples of the shuffled
+    order repeat, an unbiased choice because the permutation is fresh
+    per epoch) while keeping every batch full — shapes stay static for
+    ``lax.scan``. Tiling (not a single wrap) also covers shards SMALLER
+    than one batch (n < batch), where the old code trained on nothing.
+    """
+    perm = jax.random.permutation(jax.random.fold_in(key, ei), n)
+    total = _num_batches(n, batch) * batch
+    if total > n:
+        perm = jnp.tile(perm, -(-total // n))[:total]
+    return perm
+
+
 def _ff_layer_loss(lp, xb, theta, peer_w, impl="auto"):
     """FF objective over a stacked [pos; neg] batch xb: (2B, K).
 
@@ -121,11 +147,11 @@ def train_layer_chapter(lp, opt, x_pos, x_neg, lrs, key, *, batch, epochs,
     lrs: (epochs,) learning rate per mini-epoch (cooldown-aware).
     lp/opt are donated: their buffers are reused for the outputs."""
     n = x_pos.shape[0]
-    n_batches = n // batch
+    n_batches = _num_batches(n, batch)
 
     def epoch_body(carry, ei):
         lp, opt, step = carry
-        perm = jax.random.permutation(jax.random.fold_in(key, ei), n)
+        perm = _epoch_perm(key, ei, n, batch)
 
         def batch_body(carry, bi):
             lp, opt, step = carry
@@ -162,11 +188,11 @@ def train_layer_chapter_perf_opt(lp, head, opt, opt_h, x, y, lrs, key, *,
     softmax head) with two-layer backprop; no negative data.
     lp/head/opt/opt_h are donated."""
     n = x.shape[0]
-    n_batches = n // batch
+    n_batches = _num_batches(n, batch)
 
     def epoch_body(carry, ei):
         lp, head, opt, opt_h, step = carry
-        perm = jax.random.permutation(jax.random.fold_in(key, ei), n)
+        perm = _epoch_perm(key, ei, n, batch)
 
         def batch_body(carry, bi):
             lp, head, opt, opt_h, step = carry
@@ -200,11 +226,11 @@ def train_head_chapter(head, opt, feats, y, lrs, key, *, batch, epochs):
     """Softmax head on concatenated normalized feats of layers 2..L.
     head/opt are donated."""
     n = feats.shape[0]
-    n_batches = n // batch
+    n_batches = _num_batches(n, batch)
 
     def epoch_body(carry, ei):
         head, opt, step = carry
-        perm = jax.random.permutation(jax.random.fold_in(key, ei), n)
+        perm = _epoch_perm(key, ei, n, batch)
 
         def batch_body(carry, bi):
             head, opt, step = carry

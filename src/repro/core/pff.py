@@ -1,36 +1,34 @@
 """Pipeline Forward-Forward (PFF): the paper's distributed schedules.
 
 The key observation the paper exploits: with splits, FF training is a DAG
-of chapter-tasks T(k, c) = "train layer k for C epochs in chapter c", with
-dependencies
+of chapter-tasks T(k, c) = "train layer k for C epochs in chapter c" with
+forward-only dependencies and NO backward edges — that is what
+backpropagation would add, and why GPipe/PipeDream have bubbles that PFF
+does not. Because the DAG (not the node assignment) fixes the
+weight-update order, Sequential, Single-Layer PFF and All-Layers PFF
+produce IDENTICAL weight streams — they differ only in wall-clock.
 
-    T(k, c)  <-  T(k-1, c)   (input: layer k-1's weights after chapter c)
-    T(k, c)  <-  T(k, c-1)   (weights: layer k's own previous chapter)
+The PFF machinery is split across three modules:
 
-and NO backward edges — that is what backpropagation would add, and why
-GPipe/PipeDream have bubbles that PFF does not.
+  * ``repro.core.pff_dag``  — the chapter-task DAG itself (task set,
+    dependency edges, per-schedule node assignments). Single source of
+    truth consumed by both the simulator and the executor.
+  * this module — (a) the canonical sequential trainer
+    (``train_ff_mlp``), which executes the chapter schedule once, timing
+    every task, and (b) an event-driven simulator
+    (``simulate_schedule``) that replays those timings under each
+    schedule's node assignment to obtain distributed training time,
+    utilization and bubble fraction — the paper's Tables 1-3.
+  * ``repro.core.pff_exec`` — the REAL executor: runs the same DAG
+    concurrently across an actual ``jax.devices()`` set (one device per
+    paper "node") with async dispatch and ``device_put`` hand-off, and
+    reproduces this module's weight stream bit-exactly for All-Layers.
+    ``benchmarks/pff_exec.py`` records its measured makespan next to
+    the simulator's prediction.
 
-Because the DAG (not the node assignment) fixes the weight-update order,
-Sequential, Single-Layer PFF and All-Layers PFF produce IDENTICAL weight
-streams — they differ only in wall-clock. We therefore (a) execute the
-canonical chapter schedule once, timing every task, and (b) replay the
-timings under each schedule's node assignment with an event-driven
-simulator to obtain distributed training time, utilization and bubble
-fraction — the quantities in the paper's Tables 1-3. Federated PFF
-additionally changes the data each chapter sees (node-local shards), so
-it is trained for real with per-node data.
-
-Node assignments (N nodes, L layers, S chapters):
-  Sequential    — one node runs everything.
-  Single-Layer  — node k owns layer k (N == L); node k must also re-run
-                  the forward pass of layers < k over the train set each
-                  chapter (the paper's Algorithm 1 lines 3-5) — this is
-                  the load imbalance that makes it slower than All-Layers.
-  All-Layers    — node i executes whole chapters c ≡ i (mod N): trains
-                  layer 1..L in order (Algorithm 2). Each node computes
-                  its own forward features while it trains, so no extra
-                  forward tasks appear.
-  Federated     — All-Layers assignment + node-local data shards.
+Federated PFF additionally changes the data each chapter sees
+(node-local shards), so it is always trained for real with per-node data
+(``train_federated`` here, or the executor with schedule="federated").
 
 AdaptiveNEG adds a per-chapter negative-regeneration task; in Single-Layer
 the LAST node generates and publishes negatives (serializing), while in
@@ -48,7 +46,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import data as data_lib, optim
-from repro.core import ff, ff_mlp
+from repro.core import ff, ff_mlp, pff_dag
 
 
 # ---------------------------------------------------------------------------
@@ -241,24 +239,39 @@ class SimResult:
     node_busy: List[float]
 
 
-def _avg_durations(records: List[TaskRecord]):
-    """Mean duration per (kind, layer) — smooths jit-compile outliers."""
+def task_durations(records: List[TaskRecord], *, reducer=np.median):
+    """Duration per (kind, layer), reduced with ``reducer``.
+
+    The default ``np.median`` is robust to jit-compile outliers (the
+    first occurrence of every task shape pays compilation). The reducer
+    is exposed because these durations are what ``simulate_schedule``
+    replays — and what the real executor (``repro.core.pff_exec``) is
+    validated against in ``benchmarks/pff_exec.py``.
+    """
     acc: Dict[Tuple[str, int], List[float]] = {}
     for r in records:
         acc.setdefault((r.kind, r.layer), []).append(r.duration)
-    return {k: float(np.median(v)) for k, v in acc.items()}
+    return {k: float(reducer(v)) for k, v in acc.items()}
 
 
 def simulate_schedule(records: List[TaskRecord], schedule: str,
                       num_nodes: int, *, comm_time: float = 0.0,
-                      forward_frac: float = 0.18) -> SimResult:
-    """Replays the task DAG under a node assignment.
+                      forward_frac: float = 0.18,
+                      reducer=np.median) -> SimResult:
+    """Replays the ``pff_dag`` task DAG under a node assignment.
 
     forward_frac: cost of re-running the forward pass of ONE layer over
     the train set, as a fraction of one train-task (used by Single-Layer,
     Algorithm 1 lines 3-5; measured ratio fwd/train ≈ C * this).
+
+    Negatives are used at whatever freshness is available
+    ("UpdateXNEG(publish=False)", regenerated per node): they do NOT
+    gate the next chapter's start (``strict_neg=False`` in the DAG) —
+    their cost appears only as node busy time. This matches the paper's
+    All-Layers AdaptiveNEG behaviour; the executor's bit-exact mode
+    gates instead.
     """
-    dur = _avg_durations(records)
+    dur = task_durations(records, reducer=reducer)
     layers = sorted({r.layer for r in records if r.kind == "train"})
     chapters = sorted({r.chapter for r in records if r.kind == "train"})
     L, S = len(layers), len(chapters)
@@ -272,66 +285,46 @@ def simulate_schedule(records: List[TaskRecord], schedule: str,
     seq_total = S * (sum(t_train.values()) + (t_head if has_head else 0.0)
                      + (t_neg if has_neg else 0.0))
 
-    # ---- node assignment -------------------------------------------------
-    def node_of(layer, chapter):
-        if schedule == "sequential" or num_nodes == 1:
-            return 0
-        if schedule == "single_layer":
-            return layer % num_nodes
-        # all_layers / federated: node per chapter
-        return chapter % num_nodes
+    def owner(task: pff_dag.Task) -> int:
+        if task.kind == "head":
+            return pff_dag.head_node_of(schedule, num_nodes, n_layers=L,
+                                        chapter=task.chapter)
+        if task.kind == "neg_gen":
+            return pff_dag.neg_node_of(schedule, num_nodes,
+                                       chapter=task.chapter)
+        return pff_dag.node_of(schedule, num_nodes, layer=task.layer,
+                               chapter=task.chapter)
 
-    # ---- event simulation --------------------------------------------------
+    def cost(task: pff_dag.Task) -> float:
+        if task.kind == "head":
+            return t_head
+        if task.kind == "neg_gen":
+            return t_neg
+        extra = 0.0
+        if schedule == "single_layer" and task.layer > 0:
+            # re-forward layers < k over the train set (Algorithm 1)
+            extra = forward_frac * sum(t_train[j]
+                                       for j in range(task.layer))
+        return extra + t_train[task.layer]
+
+    # ---- event simulation over the shared DAG ------------------------------
     node_free = [0.0] * num_nodes
     node_busy = [0.0] * num_nodes
-    done: Dict[Tuple[str, int, int], float] = {}
+    done: Dict[pff_dag.Task, float] = {}
 
-    for c in range(S):
-        for k in layers:
-            n = node_of(k, c)
-            deps = []
-            if k > 0:
-                deps.append(done[("train", k - 1, c)] +
-                            (comm_time if node_of(k - 1, c) != n else 0.0))
-            if c > 0:
-                deps.append(done[("train", k, c - 1)] +
-                            (comm_time if node_of(k, c - 1) != n else 0.0))
-            # Negatives are used at whatever freshness is available
-            # ("UpdateXNEG(publish=False)", regenerated per node): they do
-            # NOT gate the chapter start — their cost appears as node busy
-            # time below. This matches the paper's All-Layers AdaptiveNEG
-            # behaviour (each node regenerates its own after each chapter).
-            extra = 0.0
-            if schedule == "single_layer" and k > 0:
-                # re-forward layers < k over the train set (Algorithm 1)
-                extra = forward_frac * sum(t_train[j] for j in range(k))
-            start = max([node_free[n]] + deps)
-            end = start + extra + t_train[k]
-            node_free[n] = end
-            node_busy[n] += extra + t_train[k]
-            done[("train", k, c)] = end
-
-        if has_head:
-            # head trains on the node that ran the chapter's last layer
-            n = node_of(L - 1, c)
-            start = max(node_free[n], done[("train", L - 1, c)])
-            end = start + t_head
-            node_free[n] = end
-            node_busy[n] += t_head
-            done[("head", L, c)] = end
-
-        if has_neg:
-            if schedule == "single_layer":
-                # the LAST node generates+publishes for everyone (paper)
-                n = num_nodes - 1
-            else:
-                # the node that just finished chapter c regenerates its own
-                n = node_of(0, c)
-            start = max(node_free[n], done[("train", L - 1, c)])
-            end = start + t_neg
-            node_free[n] = end
-            node_busy[n] += t_neg
-            done[("neg_gen", -1, c)] = end
+    for task in pff_dag.build_tasks(L, S, has_head=has_head,
+                                    has_neg=has_neg):
+        n = owner(task)
+        start = node_free[n]
+        for dep in pff_dag.deps(task, L, has_head=has_head,
+                                has_neg=has_neg):
+            start = max(start, done[dep] +
+                        (comm_time if owner(dep) != n else 0.0))
+        t = cost(task)
+        end = start + t
+        node_free[n] = end
+        node_busy[n] += t
+        done[task] = end
 
     makespan = max(node_free)
     speedup = seq_total / makespan if makespan > 0 else 1.0

@@ -1,0 +1,119 @@
+"""The PFF chapter-task DAG — the single source of truth for WHAT runs
+and in WHICH ORDER, shared by the event-driven simulator
+(``repro.core.pff.simulate_schedule``) and the real multi-device executor
+(``repro.core.pff_exec``).
+
+With splits, FF training is a DAG of chapter-tasks
+T(k, c) = "train layer k for C mini-epochs in chapter c" with
+
+    T(k, c)  <-  T(k-1, c)   (input: layer k-1's output after chapter c)
+    T(k, c)  <-  T(k, c-1)   (weights: layer k's own previous chapter)
+
+and NO backward edges — backpropagation would add them, and they are why
+GPipe/PipeDream have bubbles that PFF does not. Head and negative-
+regeneration tasks hang off the train chain:
+
+    head(c)     <-  T(L-1, c), head(c-1)     (feats + its own weights)
+    neg_gen(c)  <-  T(L-1, c)                (AdaptiveNEG scores need the
+                                              full chapter-c model)
+
+``strict_neg`` additionally gates T(0, c) on neg_gen(c-1): that is the
+executor's bit-exact mode (chapter c trains on negatives regenerated
+from the FULL chapter-(c-1) model, exactly like the sequential trainer).
+The paper's All-Layers AdaptiveNEG instead uses negatives "at whatever
+freshness is available" — the simulator models that relaxation by
+leaving the edge out.
+
+Node assignments (N nodes, L layers, S chapters):
+  sequential    — one node runs everything.
+  single_layer  — node k owns layer k; it re-runs the forward pass of
+                  layers < k over the train set each chapter (the
+                  paper's Algorithm 1 lines 3-5).
+  all_layers    — node i executes whole chapters c = i (mod N)
+                  (Algorithm 2); it computes its own forward features
+                  while it trains, so no extra forward tasks appear.
+  federated     — all_layers assignment + node-local data shards.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List
+
+SCHEDULES = ("sequential", "single_layer", "all_layers", "federated")
+
+
+@dataclasses.dataclass(frozen=True)
+class Task:
+    kind: str                  # train | head | neg_gen
+    layer: int                 # -1 for non-layer tasks
+    chapter: int
+
+
+def node_of(schedule: str, num_nodes: int, *, layer: int,
+            chapter: int) -> int:
+    """Which node owns a train-task (schedule's static assignment)."""
+    if schedule not in SCHEDULES:
+        raise ValueError(f"unknown schedule {schedule!r}; "
+                         f"expected one of {SCHEDULES}")
+    if schedule == "sequential" or num_nodes == 1:
+        return 0
+    if schedule == "single_layer":
+        return layer % num_nodes
+    # all_layers / federated: node per chapter
+    return chapter % num_nodes
+
+
+def head_node_of(schedule: str, num_nodes: int, *, n_layers: int,
+                 chapter: int) -> int:
+    """The head trains where the chapter's last layer trained."""
+    return node_of(schedule, num_nodes, layer=n_layers - 1,
+                   chapter=chapter)
+
+
+def neg_node_of(schedule: str, num_nodes: int, *, chapter: int) -> int:
+    """Negative regeneration: in Single-Layer the LAST node generates
+    and publishes for everyone (it is the only one holding the full
+    model — the paper's observed serialization); in All-Layers/Federated
+    the node that ran the chapter regenerates its own (parallel)."""
+    if schedule == "single_layer" and num_nodes > 1:
+        return num_nodes - 1
+    return node_of(schedule, num_nodes, layer=0, chapter=chapter)
+
+
+def build_tasks(n_layers: int, splits: int, *, has_head: bool = False,
+                has_neg: bool = False) -> List[Task]:
+    """All tasks in canonical (sequential-trainer) order — a valid
+    topological order of ``deps``, which is what both the simulator's
+    event loop and the executor's dispatch loop walk."""
+    tasks: List[Task] = []
+    for c in range(splits):
+        for k in range(n_layers):
+            tasks.append(Task("train", k, c))
+        if has_head:
+            tasks.append(Task("head", n_layers, c))
+        if has_neg:
+            tasks.append(Task("neg_gen", -1, c))
+    return tasks
+
+
+def deps(task: Task, n_layers: int, *, has_head: bool = False,
+         has_neg: bool = False, strict_neg: bool = False) -> List[Task]:
+    """Direct dependencies of ``task`` (see module docstring)."""
+    k, c = task.layer, task.chapter
+    out: List[Task] = []
+    if task.kind == "train":
+        if k > 0:
+            out.append(Task("train", k - 1, c))
+        if c > 0:
+            out.append(Task("train", k, c - 1))
+        if k == 0 and c > 0 and has_neg and strict_neg:
+            out.append(Task("neg_gen", -1, c - 1))
+    elif task.kind == "head":
+        out.append(Task("train", n_layers - 1, c))
+        if c > 0:
+            out.append(Task("head", n_layers, c - 1))
+    elif task.kind == "neg_gen":
+        out.append(Task("train", n_layers - 1, c))
+    else:
+        raise ValueError(f"unknown task kind {task.kind!r}")
+    return out

@@ -1,0 +1,451 @@
+"""Real multi-device PFF executor: the paper's schedules on actual devices.
+
+Where ``repro.core.pff`` times the canonical chapter schedule once and
+REPLAYS the timings through an event-driven simulator, this module RUNS
+the Single-Layer, All-Layers and Federated schedules concurrently across
+an actual ``jax.devices()`` set — one device per paper "node"
+(``launch.mesh.pff_node_devices``; on CI/CPU export
+``XLA_FLAGS=--xla_force_host_platform_device_count=4`` before importing
+jax). The chapter-task DAG and the per-schedule node assignments come
+from ``repro.core.pff_dag`` — the same module the simulator replays.
+
+Execution model: the per-schedule drivers dispatch tasks in the DAG's
+canonical topological order (the same order ``pff_dag.build_tasks``
+lists; node assignments come from ``pff_dag.node_of`` & co — the
+dependency EDGES are realized implicitly as JAX data dependencies, which
+``tests/test_pff_exec.py``'s ``test_dag_topological_order`` plus the
+bit-exactness oracle keep honest against the DAG module) and never
+block. Every task's inputs are ``jax.device_put`` onto
+its owning node (activation/weight hand-off along the DAG edges), the
+jitted chapter trainers (``ff_mlp.train_layer_chapter`` & co — the fused
+Pallas ``ff_dense`` hot loop, with donated param/opt buffers) are
+dispatched asynchronously, and JAX's async runtime overlaps nodes: node
+i crunches chapter c while node i+1 already trains layer 0 of chapter
+c+1. Makespan is wall-clock from first dispatch to the last weight
+buffer becoming ready.
+
+Bit-exactness: the DAG fixes the weight-update order, so the executor
+reuses the EXACT eager/jitted call sequence of the sequential trainer
+per task — same keys, same learning-rate arrays, same kernel path — and
+therefore reproduces ``pff.train_ff_mlp``'s weight stream bit-exactly
+for All-Layers (and Federated vs ``pff.train_federated``). That is the
+correctness oracle enforced by ``tests/test_pff_exec.py``. AdaptiveNEG
+negatives are regenerated with "publish" semantics (the DAG's
+``strict_neg`` gating: chapter c+1 trains on negatives from the full
+chapter-c model), which is exactly what the sequential trainer does;
+RandomNEG negatives depend only on the PRNG key, so each node
+regenerates its own locally — parallel, and still bit-exact.
+
+``benchmarks/pff_exec.py`` records this executor's measured makespan
+next to the simulator's prediction (``BENCH_pff_exec.json``).
+
+Not covered (stays on the sequential trainer): the Performance-Optimized
+goodness path (``cfg.goodness_fn == "perf_opt"``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import data as data_lib, optim
+from repro.core import ff, ff_mlp, pff, pff_dag
+from repro.launch import mesh as mesh_lib
+
+
+@dataclasses.dataclass
+class ExecResult:
+    params: dict
+    schedule: str
+    num_nodes: int
+    makespan: float                        # seconds, first dispatch -> ready
+    test_acc: float
+    records: Optional[List[pff.TaskRecord]]  # per-task durations (profile)
+    node_busy: Optional[List[float]]         # per-node busy seconds (profile)
+
+
+def _fwd(lp, x):
+    """One layer forward + Hinton length-norm — the inter-layer hand-off.
+    Mirrors the sequential trainer's eager call sequence exactly (bit-
+    exactness depends on it)."""
+    return ff_mlp._norm(ff_mlp.layer_apply(lp, x))
+
+
+class PFFExecutor:
+    """Runs one PFF schedule for real on ``num_nodes`` devices.
+
+    ``run()`` re-initializes params from ``cfg.seed`` every call, so
+    calling it twice and timing the second run measures a warm cache
+    (all per-device executables compiled) — what the benchmark does.
+    """
+
+    def __init__(self, cfg, task: data_lib.ImageTask, schedule: str,
+                 num_nodes: int, *, devices=None):
+        if schedule not in pff_dag.SCHEDULES:
+            raise ValueError(f"unknown schedule {schedule!r}; expected "
+                             f"one of {pff_dag.SCHEDULES}")
+        if getattr(cfg, "goodness_fn", "sumsq") == "perf_opt":
+            raise NotImplementedError(
+                "the real executor covers the paper's FF path; "
+                "Performance-Optimized goodness stays on pff.train_ff_mlp")
+        if schedule == "sequential" and num_nodes != 1:
+            raise ValueError("sequential means num_nodes=1")
+        self.cfg = cfg
+        self.task = task
+        self.schedule = schedule
+        self.num_nodes = num_nodes
+        self.devices = (list(devices)[:num_nodes] if devices is not None
+                        else mesh_lib.pff_node_devices(num_nodes))
+        self.n_layers = len(cfg.layer_sizes) - 1
+        self.C = max(cfg.epochs // cfg.splits, 1)
+        self.impl = getattr(cfg, "kernel_impl", "auto")
+        self.has_head = cfg.classifier == "softmax"
+        self.has_neg = cfg.neg_mode in ("adaptive", "random")
+        self._setup_constants()
+
+    # ---- per-device constants (replicated once, before any timing) -------
+    def _setup_constants(self):
+        cfg, task = self.cfg, self.task
+        key = jax.random.PRNGKey(cfg.seed)
+        self.key = key
+        self.kneg = jax.random.fold_in(key, 999)
+        shards = None
+        if self.schedule == "federated":
+            # same shard construction as pff.train_federated: chapter c
+            # uses shard c % N — which IS node c % N's own shard, so
+            # training data never crosses a node boundary.
+            rng = np.random.default_rng(cfg.seed)
+            order = rng.permutation(len(task.x_train))
+            shards = [order[i::self.num_nodes]
+                      for i in range(self.num_nodes)]
+        self._const: Dict[int, dict] = {}
+        for node, dev in enumerate(self.devices):
+            x_d = jax.device_put(task.x_train, dev)
+            y_d = jax.device_put(task.y_train, dev)
+            c = {"x": x_d, "y": y_d,
+                 "xp0": ff_mlp._norm(ff.overlay_label(
+                     x_d, y_d, cfg.num_classes)),
+                 "xn0_init": ff_mlp._norm(pff._make_negatives(
+                     self.kneg, cfg, None, x_d, y_d, "random")),
+                 "idx": (jax.device_put(shards[node], dev)
+                         if shards is not None else None)}
+            if self.has_head:
+                c["x_neutral"] = ff.overlay_neutral(x_d, cfg.num_classes)
+            self._const[node] = c
+        jax.block_until_ready([v for c in self._const.values()
+                               for v in c.values() if v is not None])
+
+    # ---- helpers ---------------------------------------------------------
+    def _lrs(self, chapter):
+        cfg, C = self.cfg, self.C
+        lrs = jnp.asarray([
+            optim.cooldown_lr(cfg.lr_ff, chapter * C + e, cfg.epochs,
+                              cfg.cooldown_after) for e in range(C)],
+            jnp.float32)
+        return lrs, lrs * (cfg.lr_softmax / cfg.lr_ff)
+
+    def _pull(self, tree, node):
+        """Async hand-off of a param/opt pytree onto ``node``'s device."""
+        return jax.device_put(tree, self.devices[node])
+
+    def _xn0_for(self, chapter, node):
+        """The (full-size, normalized) negatives the sequential trainer
+        would use for this chapter, resident on ``node``."""
+        const = self._const[node]
+        if not self.has_neg or chapter == 0:
+            return const["xn0_init"]
+        if self.cfg.neg_mode == "random":
+            # key-only — each node regenerates its own copy locally
+            # (the paper's parallel per-node UpdateXNEG), bit-identical
+            # to the sequential trainer's stream by PRNG determinism.
+            return ff_mlp._norm(pff._make_negatives(
+                jax.random.fold_in(self.kneg, chapter - 1), self.cfg,
+                None, const["x"], const["y"], "random"))
+        # adaptive: published by chapter-(c-1)'s neg_gen task
+        src_chapter, xn0 = self._neg
+        assert src_chapter == chapter - 1, (src_chapter, chapter)
+        return self._pull(xn0, node)
+
+    def _maybe_record(self, profile, node, kind, layer, chapter, t0, out):
+        if not profile:
+            return
+        jax.block_until_ready(out)
+        dt = time.perf_counter() - t0
+        self._records.append(pff.TaskRecord(kind, layer, chapter, dt))
+        self._busy[node] += dt
+
+    # ---- per-task bodies (each mirrors the sequential trainer) -----------
+    def _train_task(self, k, chapter, node, xp, xn, lrs, kc, profile):
+        t0 = time.perf_counter()
+        lp, op = self._pull(self._layers[k], node)
+        lp, op = ff_mlp.train_layer_chapter(
+            lp, op, xp, xn, lrs, jax.random.fold_in(kc, k),
+            batch=self.cfg.batch_size, epochs=self.C,
+            theta=self.cfg.theta, peer_w=self.cfg.peer_w, impl=self.impl)
+        self._layers[k] = (lp, op)
+        self._maybe_record(profile, node, "train", k, chapter, t0, lp)
+        return lp
+
+    def _head_task(self, chapter, node, idx, lrs_head, kc, profile):
+        const = self._const[node]
+        t0 = time.perf_counter()
+        xn_all = (const["x_neutral"] if idx is None
+                  else const["x_neutral"][idx])
+        # pull every layer onto the head node (no-op when already there,
+        # e.g. all_layers; real hand-off for single_layer)
+        feats = ff_mlp.softmax_feats(
+            [self._pull(lp, node) for lp, _ in self._layers], xn_all)
+        head, op = self._pull(self._head, node)
+        head, op = ff_mlp.train_head_chapter(
+            head, op, feats, const["y"] if idx is None else const["y"][idx],
+            lrs_head, jax.random.fold_in(kc, 77),
+            batch=self.cfg.batch_size, epochs=self.C)
+        self._head = (head, op)
+        self._maybe_record(profile, node, "head", self.n_layers, chapter,
+                           t0, head["w"])
+
+    def _neg_task(self, chapter, node, profile):
+        """AdaptiveNEG regeneration from the full chapter-c model,
+        published for the next chapter ("UpdateXNEG(publish=True)" — the
+        DAG's strict_neg gating, matching the sequential trainer)."""
+        const = self._const[node]
+        t0 = time.perf_counter()
+        params = {"layers": [self._pull(lp, node)
+                             for lp, _ in self._layers]}
+        scores = pff._class_scores_chunked(params, const["x"], self.cfg)
+        xn0 = ff_mlp._norm(pff._make_negatives(
+            jax.random.fold_in(self.kneg, chapter), self.cfg, params,
+            const["x"], const["y"], "adaptive", scores))
+        self._neg = (chapter, xn0)
+        self._maybe_record(profile, node, "neg_gen", -1, chapter, t0, xn0)
+
+    # ---- schedule drivers ------------------------------------------------
+    def _run_chapter_owned(self, chapter, profile):
+        """all_layers / federated / sequential: one node runs the whole
+        chapter, computing its own forward features as it trains."""
+        node = pff_dag.node_of(self.schedule, self.num_nodes, layer=0,
+                               chapter=chapter)
+        const = self._const[node]
+        idx = const["idx"]
+        lrs, lrs_head = self._lrs(chapter)
+        kc = jax.random.fold_in(self.key, chapter)
+        xn0 = self._xn0_for(chapter, node)
+        xp = const["xp0"] if idx is None else const["xp0"][idx]
+        xn = xn0 if idx is None else xn0[idx]
+        for k in range(self.n_layers):
+            lp = self._train_task(k, chapter, node, xp, xn, lrs, kc,
+                                  profile)
+            if k + 1 < self.n_layers:
+                xp = _fwd(lp, xp)
+                xn = _fwd(lp, xn)
+        if self.has_head:
+            self._head_task(chapter, node, idx, lrs_head, kc, profile)
+        if self.cfg.neg_mode == "adaptive":
+            self._neg_task(chapter, node, profile)
+
+    def _run_chapter_single_layer(self, chapter, profile):
+        """single_layer: node k owns layer k and re-runs the forward
+        pass of layers < k over the train set (Algorithm 1 lines 3-5) —
+        the load imbalance the paper observes. Weight hand-off: node k
+        pulls layers 0..k-1's chapter-c weights as they appear."""
+        lrs, lrs_head = self._lrs(chapter)
+        kc = jax.random.fold_in(self.key, chapter)
+        for k in range(self.n_layers):
+            node = pff_dag.node_of(self.schedule, self.num_nodes,
+                                   layer=k, chapter=chapter)
+            const = self._const[node]
+            t0 = time.perf_counter()
+            xp = const["xp0"]
+            xn = self._xn0_for(chapter, node)
+            for j in range(k):       # Algorithm-1 forward recompute
+                w_j = self._pull(self._layers[j][0], node)
+                xp = _fwd(w_j, xp)
+                xn = _fwd(w_j, xn)
+            self._train_task(k, chapter, node, xp, xn, lrs, kc, profile)
+        if self.has_head:
+            node = pff_dag.head_node_of(self.schedule, self.num_nodes,
+                                        n_layers=self.n_layers,
+                                        chapter=chapter)
+            self._head_task(chapter, node, None, lrs_head, kc, profile)
+        if self.cfg.neg_mode == "adaptive":
+            # the LAST node holds the full model freshest: it generates
+            # and publishes for everyone (the paper's serialization).
+            self._neg_task(chapter,
+                           pff_dag.neg_node_of(self.schedule,
+                                               self.num_nodes,
+                                               chapter=chapter), profile)
+
+    # ---- entry point -----------------------------------------------------
+    def run(self, *, profile: bool = False) -> ExecResult:
+        """Executes the schedule once. ``profile=True`` blocks after
+        every task to collect per-task ``TaskRecord``s (destroys the
+        overlap, so use a separate non-profiled run for makespan)."""
+        cfg = self.cfg
+        params = ff_mlp.init(jax.random.PRNGKey(cfg.seed), cfg)
+        opt = ff_mlp.opt_init(params)
+        self._records: List[pff.TaskRecord] = []
+        self._busy = [0.0] * self.num_nodes
+        self._neg: Tuple[int, object] = (-1, None)
+
+        t_start = time.perf_counter()
+        # initial placement rides the timed window: it is part of the
+        # schedule's real cost (the simulator's t=0 is the same state).
+        self._layers = [(lp, op) for lp, op in
+                        zip(params["layers"], opt["layers"])]
+        self._head = (params["head"], opt["head"])
+        for chapter in range(cfg.splits):
+            if self.schedule == "single_layer":
+                self._run_chapter_single_layer(chapter, profile)
+            else:
+                self._run_chapter_owned(chapter, profile)
+        outs = [lp for lp, _ in self._layers] + [self._head[0]]
+        if self._neg[1] is not None:
+            outs.append(self._neg[1])
+        jax.block_until_ready(outs)
+        makespan = time.perf_counter() - t_start
+
+        final = {"layers": [self._pull(lp, 0) for lp, _ in self._layers],
+                 "head": self._pull(self._head[0], 0)}
+        acc = ff_mlp.accuracy(final, self.task.x_test, self.task.y_test,
+                              cfg.num_classes, cfg.classifier,
+                              impl=self.impl)
+        return ExecResult(final, self.schedule, self.num_nodes, makespan,
+                          acc, self._records if profile else None,
+                          list(self._busy) if profile else None)
+
+
+def run_pff_exec(cfg, task, schedule, num_nodes, *, devices=None,
+                 profile=False) -> ExecResult:
+    """One-shot convenience wrapper around ``PFFExecutor``."""
+    return PFFExecutor(cfg, task, schedule, num_nodes,
+                       devices=devices).run(profile=profile)
+
+
+def params_bit_equal(a, b, *, with_head=False):
+    """True iff two FF-MLP params pytrees carry BIT-IDENTICAL layer
+    (and optionally head) weights — the executor's correctness oracle,
+    shared by the selftest, the benchmark gate, and the example."""
+    def leaves_equal(pa, pb):
+        return all(bool(jnp.array_equal(pa[name], pb[name]))
+                   for name in ("w", "b"))
+    if len(a["layers"]) != len(b["layers"]):
+        return False
+    ok = all(leaves_equal(pa, pb)
+             for pa, pb in zip(a["layers"], b["layers"]))
+    if with_head:
+        ok = ok and leaves_equal(a["head"], b["head"])
+    return ok
+
+
+# ---------------------------------------------------------------------------
+# Self-test: weight-stream bit-equality vs the sequential trainer.
+# Run in a subprocess with XLA_FLAGS=--xla_force_host_platform_device_count=4
+# (tests/test_pff_exec.py does; `make pff-exec-smoke` exercises the same
+# path through benchmarks/pff_exec.py).
+# ---------------------------------------------------------------------------
+
+def _check_case(schedule, nodes, splits, n_train, neg_mode, classifier,
+                *, check_sim_bound=False):
+    """Trains one config both ways and returns a list of failure
+    strings (empty = the executor reproduced the sequential trainer's
+    weight stream bit-exactly)."""
+    from repro.configs.ff_mlp import FFMLPConfig
+
+    task = data_lib.mnist_like(n_train=n_train, n_test=200)
+    cfg = FFMLPConfig(layer_sizes=(784, 128, 128), epochs=splits * 2,
+                      splits=splits, neg_mode=neg_mode,
+                      classifier=classifier, batch_size=64, seed=0)
+    if schedule == "federated":
+        ref = pff.train_federated(cfg, task, nodes)
+    else:
+        ref = pff.train_ff_mlp(cfg, task)
+    res = run_pff_exec(cfg, task, schedule, nodes)
+
+    failures = []
+    if not params_bit_equal(ref.params, res.params,
+                            with_head=classifier == "softmax"):
+        # diagnose which leaves diverged and by how much
+        named = [(f"layer {k}", lp_ref, lp_ex) for k, (lp_ref, lp_ex) in
+                 enumerate(zip(ref.params["layers"], res.params["layers"]))]
+        if classifier == "softmax":
+            named.append(("head", ref.params["head"], res.params["head"]))
+        for label, pa, pb in named:
+            for name in ("w", "b"):
+                if not bool(jnp.array_equal(pa[name], pb[name])):
+                    err = float(jnp.abs(pa[name] - pb[name]).max())
+                    failures.append(f"{schedule}: {label} {name} diverged,"
+                                    f" max|diff|={err:.3e}")
+    sim_note = ""
+    if check_sim_bound:
+        # Sanity bound, deliberately loose (shared-core container, cold
+        # executor caches): a real run can never beat the simulator's
+        # perfect-overlap replay of the same median task times by 4x.
+        sim = pff.simulate_schedule(ref.records, schedule, nodes)
+        sim_note = f" sim={sim.makespan:.2f}s"
+        if res.makespan < 0.25 * sim.makespan:
+            failures.append(
+                f"{schedule}: measured makespan {res.makespan:.3f}s "
+                f"implausibly beats the simulator's perfect-overlap "
+                f"prediction {sim.makespan:.3f}s by more than 4x")
+    print(f"devices={len(jax.devices())} schedule={schedule} "
+          f"nodes={nodes} neg={neg_mode} cls={classifier}: "
+          f"exec acc={res.test_acc:.4f} seq acc={ref.test_acc:.4f} "
+          f"makespan={res.makespan:.2f}s{sim_note} -> "
+          + ("FAIL" if failures else "bit-exact"))
+    return failures
+
+
+# (schedule, nodes, splits, n_train, neg_mode, classifier)
+# n_train=520: 520 % 64 != 0 — the tail-batch path is always exercised;
+# federated shards of 130 hit a different (also non-divisible) tail.
+_MATRIX = (
+    ("all_layers", 4, 4, 520, "random", "goodness"),
+    ("all_layers", 4, 3, 520, "adaptive", "softmax"),
+    ("federated", 4, 4, 520, "random", "goodness"),
+    ("single_layer", 2, 3, 520, "random", "goodness"),
+)
+
+
+def _selftest(argv=None):
+    import argparse
+
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--matrix", action="store_true",
+                   help="run the full schedule/neg/classifier matrix "
+                        "in one process (what tests/test_pff_exec.py "
+                        "invokes)")
+    p.add_argument("--nodes", type=int, default=4)
+    p.add_argument("--schedule", default="all_layers",
+                   choices=list(pff_dag.SCHEDULES))
+    p.add_argument("--splits", type=int, default=4)
+    p.add_argument("--n-train", type=int, default=1000,
+                   help="deliberately NOT divisible by the batch size, "
+                        "so the tail-batch path is exercised too")
+    p.add_argument("--neg-mode", default="random",
+                   choices=["random", "adaptive", "fixed"])
+    p.add_argument("--classifier", default="goodness",
+                   choices=["goodness", "softmax"])
+    args = p.parse_args(argv)
+
+    failures = []
+    if args.matrix:
+        for i, case in enumerate(_MATRIX):
+            failures += _check_case(*case, check_sim_bound=i == 0)
+    else:
+        failures = _check_case(args.schedule, args.nodes, args.splits,
+                               args.n_train, args.neg_mode,
+                               args.classifier, check_sim_bound=True)
+    if failures:
+        print("SELFTEST FAILED:\n  " + "\n  ".join(failures))
+        return 1
+    print("selftest OK: executor weight stream bit-exact vs the "
+          "sequential trainer")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(_selftest())

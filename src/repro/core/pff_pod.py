@@ -32,7 +32,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-from repro import optim
+from repro import optim, sharding
 from repro.core import ff
 from repro.models import blocks, common
 from repro.models.mlp import Dist, NO_DIST
@@ -78,6 +78,16 @@ def make_pff_pod_step(cfg, mesh, *, lr=1e-3, seed=0, theta=None):
 
         (loss, y), grads = jax.value_and_grad(
             loss_fn, has_aux=True)(unit_p)
+        # Data-parallel correctness: each data shard sees a DIFFERENT
+        # slice of the stacked [pos; neg] batch (the first shards are
+        # all-positive, the last all-negative), so the shard-local
+        # gradients MUST be averaged over the data axis before the
+        # update — the out_specs claim params replicated over "data",
+        # and without this pmean the replicas silently diverge (and the
+        # unchecked-replication assembly turns that into NaNs on
+        # multi-axis meshes).
+        grads = jax.lax.pmean(grads, "data")
+        loss = jax.lax.pmean(loss, "data")
         new_p, st = optim.adam_update(unit_p, grads,
                                       {"m": unit_m, "v": unit_v},
                                       lr=lr, step=step)
@@ -95,43 +105,70 @@ def make_pff_pod_step(cfg, mesh, *, lr=1e-3, seed=0, theta=None):
         return x_out, ys[0], ys[1], ys[2], ys[3].sum()
 
     def pod_program(gp, gm, gv, x_in, inflight, is_pos, step):
-        """shard_map body over the stage axis. inflight: (B, S, d) the
-        activation register between stages."""
+        """shard_map body over the stage axis. inflight: the pipeline
+        activation register, stage-local slice (1, 2B_local, S, d) of
+        the global (stages, 2B, S, d) array — the explicit leading
+        stage axis is what makes its out_specs sound (each stage's
+        register genuinely differs, so it must be SHARDED over "stage",
+        not falsely claimed replicated)."""
         sid = jax.lax.axis_index("stage")
         # stage 0 consumes the fresh embedding; others consume inflight
-        x = jnp.where(sid == 0, x_in, inflight)
+        x = jnp.where(sid == 0, x_in, inflight[0])
         y, new_gp, new_gm, new_gv, loss = stage_step(
             gp, gm, gv, x, is_pos, step)
         # forward the produced activations to the next stage (the FF
         # pipeline register) — pure forward traffic, no backward edge.
-        nxt = jax.lax.rem(sid + 1, stages)
         perm = [(s, int((s + 1) % stages)) for s in range(stages)]
-        new_inflight = jax.lax.ppermute(y, "stage", perm)
-        del nxt
+        new_inflight = jax.lax.ppermute(y, "stage", perm)[None]
+        # total pipeline loss: the scalar leaves the shard_map with
+        # out_specs P(), i.e. claimed replicated over EVERY mesh axis —
+        # without this psum the claim is false over "stage" (each stage
+        # had its own stage-local sum), which is exactly the kind of
+        # unsound spec that miscompiles under jit (NaN weights on
+        # multi-axis meshes) and that check_rep/check_vma rejects.
+        loss = jax.lax.psum(loss, "stage")
         return new_gp, new_gm, new_gv, new_inflight, loss
 
     gspec = P("stage")          # stacked layer axis sharded over stages
 
-    def step_fn(params, opt_state, batch, inflight, step):
-        """params: {"embed": ..., "groups": (stacked,)}; inflight is the
-        pipeline register pytree returned by the previous call."""
-        tokens = batch["tokens"][:, :-1]
+    # check=True: every out_specs replication claim is now sound
+    # (grads/loss pmean'd over "data", loss psum'd over "stage"), so
+    # let the checker prove it instead of trusting us. Built ONCE so the
+    # jit wrapper below caches a single executable.
+    smap2 = jax.jit(sharding.shard_map(
+        pod_program, mesh=mesh,
+        in_specs=(gspec, gspec, gspec, P("data"),
+                  P("stage", "data"), P("data"), P()),
+        out_specs=(gspec, gspec, gspec, P("stage", "data"), P()),
+        check=True))
+
+    @jax.jit
+    def _prep(embed, tokens, step):
+        """Negative corruption + embedding lookup (the per-step glue)."""
+        tokens = tokens[:, :-1]
         B = tokens.shape[0]
         key = jax.random.fold_in(jax.random.PRNGKey(seed), step)
         neg = ff.corrupt_tokens(key, tokens, cfg.vocab)
         x_tok = jnp.concatenate([tokens, neg], axis=0)
         is_pos = jnp.concatenate(
             [jnp.ones((B,)), jnp.zeros((B,))]).astype(jnp.float32)
-        x = jnp.take(params["embed"], x_tok, axis=0)
+        return jnp.take(embed, x_tok, axis=0), is_pos
+
+    def step_fn(params, opt_state, batch, inflight, step):
+        """params: {"embed": ..., "groups": (stacked,)}; inflight is the
+        pipeline register pytree returned by the previous call.
+
+        Already jitted INTERNALLY as two executables (glue, pipeline) —
+        do NOT wrap it in an outer jax.jit: on jax 0.4.x, fusing the
+        PRNG negative-corruption glue into the same XLA program as the
+        manually-sharded pipeline miscompiles under GSPMD (NaN weights
+        on any data x model mesh; the split is the workaround).
+        """
+        x, is_pos = _prep(params["embed"], batch["tokens"],
+                          jnp.asarray(step, jnp.int32))
         gp = params["groups"][0]
         gm = opt_state["m"]["groups"][0]
         gv = opt_state["v"]["groups"][0]
-        smap2 = jax.shard_map(
-            pod_program, mesh=mesh,
-            in_specs=(gspec, gspec, gspec, P("data"), P("data"), P("data"),
-                      P()),
-            out_specs=(gspec, gspec, gspec, P("data"), P()),
-            check_vma=False)
         new_gp, new_gm, new_gv, new_inflight, loss = smap2(
             gp, gm, gv, x, inflight, is_pos,
             jnp.asarray(step, jnp.int32))
@@ -145,7 +182,8 @@ def make_pff_pod_step(cfg, mesh, *, lr=1e-3, seed=0, theta=None):
     return step_fn
 
 
-def init_inflight(cfg, batch, seq):
-    """Zero pipeline register: (2*batch, seq, d_model)."""
-    return jnp.zeros((2 * batch, seq, cfg.d_model),
+def init_inflight(cfg, batch, seq, stages=1):
+    """Zero pipeline register: (stages, 2*batch, seq, d_model) — one
+    activation slot per pipeline stage (sharded over the stage axis)."""
+    return jnp.zeros((stages, 2 * batch, seq, cfg.d_model),
                      common.dtype_of(cfg))

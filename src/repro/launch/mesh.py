@@ -8,6 +8,8 @@ from __future__ import annotations
 
 import jax
 
+PFF_XLA_FLAG = "--xla_force_host_platform_device_count={n}"
+
 
 def make_production_mesh(*, multi_pod: bool = False):
     """Single pod: (data=16, model=16) = 256 chips (TPU v5e pod).
@@ -32,3 +34,24 @@ def make_host_mesh(axes=("data", "model")):
     if len(axes) == 2:
         return jax.make_mesh((1, n), axes)
     return jax.make_mesh((n,), axes)
+
+
+def pff_node_devices(num_nodes: int):
+    """One device per paper "node" for the real PFF executor
+    (repro.core.pff_exec) — the first ``num_nodes`` entries of
+    ``jax.devices()``.
+
+    On CI/CPU, fake the paper's four compute nodes by exporting
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=4`` (see
+    ``PFF_XLA_FLAG``) BEFORE jax is imported; on real hardware the
+    accelerators are used as-is. Raises with that remedy when the host
+    exposes too few devices.
+    """
+    devs = jax.devices()
+    if len(devs) < num_nodes:
+        raise RuntimeError(
+            f"PFF executor needs {num_nodes} devices but jax sees only "
+            f"{len(devs)}; export XLA_FLAGS="
+            f"{PFF_XLA_FLAG.format(n=num_nodes)} before importing jax "
+            f"(CI/CPU), or run on a host with >= {num_nodes} accelerators.")
+    return list(devs[:num_nodes])

@@ -22,6 +22,7 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro import sharding
 from repro.models import common
 
 
@@ -250,7 +251,7 @@ def moe_apply(p, x, moe, act_name, dist: Dist = NO_DIST):
     if "shared" in p:
         specs["shared"] = {"wi": P(None, ma), "wg": P(None, ma),
                            "wo": P(ma, None)}
-    fn = jax.shard_map(
+    fn = sharding.shard_map(
         body, mesh=dist.mesh, in_specs=(specs, in_x),
-        out_specs=(in_x, P()), check_vma=False)
+        out_specs=(in_x, P()))
     return fn(p, x)

@@ -34,14 +34,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
-# Compat: jax >= 0.6 exposes jax.shard_map (kw: check_vma); this
-# container's 0.4.x only has the experimental one (kw: check_rep).
-if hasattr(jax, "shard_map"):
-    _shard_map = jax.shard_map
-    _CHECK_KW = "check_vma"
-else:
-    from jax.experimental.shard_map import shard_map as _shard_map
-    _CHECK_KW = "check_rep"
+from repro.sharding import shard_map as _shard_map
 
 
 def _axis_size(axis):
@@ -122,6 +115,5 @@ def ring_attention(q, k, v, *, mesh, axis="model", causal=True,
         functools.partial(ring_attention_local, axis=axis, causal=causal),
         mesh=mesh,
         in_specs=(seq_spec, seq_spec, seq_spec),
-        out_specs=seq_spec,
-        **{_CHECK_KW: False})
+        out_specs=seq_spec)
     return fn(q, k, v)

@@ -31,6 +31,18 @@ import jax
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 
+def shard_map(body, *, mesh, in_specs, out_specs, check: bool = False):
+    """Version-compat ``shard_map``: jax >= 0.6 exposes ``jax.shard_map``
+    (kw ``check_vma``); this container's 0.4.x only has the experimental
+    one (kw ``check_rep``). One shim for every call site."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(body, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=check)
+    from jax.experimental.shard_map import shard_map as _sm
+    return _sm(body, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+               check_rep=check)
+
+
 def _fit(spec, shape, mesh):
     """Drop axis names that don't divide the dim; None-pad to rank."""
     names = list(spec) + [None] * (len(shape) - len(spec))

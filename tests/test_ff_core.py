@@ -65,6 +65,37 @@ def test_adaptive_wrong_labels_masks_true_class():
     np.testing.assert_array_equal(wrong, [1, 2])
 
 
+def test_adaptive_wrong_labels_sampling_never_correct():
+    key = jax.random.PRNGKey(4)
+    scores = jax.random.normal(key, (200, 10))
+    y = jax.random.randint(key, (200,), 0, 10)
+    wrong = ff.adaptive_wrong_labels(scores, y, key=key)
+    assert not bool(jnp.any(wrong == y))
+
+
+def test_adaptive_wrong_labels_moments_exclude_true_column():
+    """Regression: the z-score moments must come from the WRONG-label
+    columns only. The old code normalized by the full row (true label
+    included), so a huge true-label score flattened the distribution
+    over wrong labels — and changing ONLY the true label's score changed
+    which negatives were sampled."""
+    key = jax.random.PRNGKey(0)
+    y = jnp.zeros((4096,), jnp.int32)
+    base = jnp.tile(jnp.asarray([[10.0, 1.0, 2.0]]), (4096, 1))
+    spiked = base.at[:, 0].set(1000.0)       # true-label column only
+    lab_base = ff.adaptive_wrong_labels(base, y, key=key)
+    lab_spiked = ff.adaptive_wrong_labels(spiked, y, key=key)
+    # invariance: the true-label magnitude is not part of the moments
+    np.testing.assert_array_equal(lab_base, lab_spiked)
+    # hand-computed distribution: wrong columns {1.0, 2.0} -> mu=1.5,
+    # sd=0.5 -> z = (-1, +1) -> P(2)/P(1) = e^2 ~ 7.4. The old full-row
+    # moments gave z-diff ~ 0.25 -> ratio ~ 1.28 (nearly uniform).
+    counts = jnp.bincount(lab_base, length=3)
+    assert int(counts[0]) == 0               # true label masked
+    ratio = float(counts[2]) / float(counts[1])
+    assert 5.0 < ratio < 11.0, ratio
+
+
 def test_corrupt_tokens_in_vocab_and_different():
     key = jax.random.PRNGKey(2)
     tokens = jax.random.randint(key, (8, 64), 0, 100)

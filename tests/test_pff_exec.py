@@ -1,0 +1,114 @@
+"""Real multi-device PFF executor tests.
+
+The executor needs several host devices
+(XLA_FLAGS=--xla_force_host_platform_device_count=4), but conftest keeps
+the in-process test runner on the real single CPU device on purpose —
+so the multi-device runs happen in ONE subprocess that sweeps the whole
+schedule matrix (repro.core.pff_exec._MATRIX): All-Layers (random and
+adaptive+softmax), Federated, and Single-Layer, each checked for
+weight-stream BIT-EQUALITY against the sequential trainer, plus the
+simulate-vs-measured makespan sanity bound. Every matrix case uses an
+n_train that is NOT divisible by the batch size, so the tail-batch
+path is exercised end to end.
+
+In-process tests cover what works on one device: the executor's
+argument validation and the DAG module it shares with the simulator.
+"""
+import os
+import subprocess
+import sys
+
+import pytest
+
+from repro.core import pff_dag
+
+_SRC = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                    os.pardir, "src")
+
+
+def test_exec_weight_stream_bit_exact_matrix():
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    env["PYTHONPATH"] = _SRC + os.pathsep + env.get("PYTHONPATH", "")
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.core.pff_exec", "--matrix"],
+        capture_output=True, text=True, env=env, timeout=540)
+    assert r.returncode == 0, f"stdout:\n{r.stdout}\nstderr:\n{r.stderr}"
+    assert "bit-exact vs the sequential trainer" in r.stdout
+
+
+def test_executor_rejects_bad_args():
+    from repro import data as data_lib
+    from repro.configs.ff_mlp import FFMLPConfig
+    from repro.core import pff_exec
+
+    task = data_lib.mnist_like(n_train=200, n_test=50)
+    cfg = FFMLPConfig(layer_sizes=(784, 32), epochs=2, splits=2)
+    with pytest.raises(ValueError):
+        pff_exec.PFFExecutor(cfg, task, "gpipe", 1)
+    with pytest.raises(ValueError):
+        pff_exec.PFFExecutor(cfg, task, "sequential", 2)
+    with pytest.raises(NotImplementedError):
+        pff_exec.PFFExecutor(
+            cfg.__class__(layer_sizes=(784, 32), goodness_fn="perf_opt"),
+            task, "all_layers", 1)
+
+
+def test_executor_sequential_single_device_runs():
+    """N=1 needs no faked devices — the executor must work in-process
+    and still match the canonical trainer bit-exactly."""
+    import jax.numpy as jnp
+    from repro import data as data_lib
+    from repro.configs.ff_mlp import FFMLPConfig
+    from repro.core import pff, pff_exec
+
+    task = data_lib.mnist_like(n_train=200, n_test=50)
+    cfg = FFMLPConfig(layer_sizes=(784, 64), epochs=2, splits=2,
+                      neg_mode="random", classifier="goodness",
+                      batch_size=64, seed=0)
+    ref = pff.train_ff_mlp(cfg, task)
+    res = pff_exec.run_pff_exec(cfg, task, "sequential", 1)
+    for lp_ref, lp_ex in zip(ref.params["layers"], res.params["layers"]):
+        assert bool(jnp.array_equal(lp_ref["w"], lp_ex["w"]))
+        assert bool(jnp.array_equal(lp_ref["b"], lp_ex["b"]))
+    assert res.makespan > 0
+
+
+# ---------------------------------------------------------------------------
+# The shared DAG module (consumed by both simulator and executor)
+# ---------------------------------------------------------------------------
+
+def test_dag_topological_order():
+    """build_tasks must list every dep before its dependent."""
+    seen = set()
+    for has_head, has_neg in [(False, False), (True, True)]:
+        seen.clear()
+        for t in pff_dag.build_tasks(3, 4, has_head=has_head,
+                                     has_neg=has_neg):
+            for d in pff_dag.deps(t, 3, has_head=has_head,
+                                  has_neg=has_neg, strict_neg=True):
+                assert d in seen, (t, d)
+            seen.add(t)
+
+
+def test_dag_node_assignments_match_paper():
+    # all_layers: node per chapter (Algorithm 2)
+    assert [pff_dag.node_of("all_layers", 4, layer=k, chapter=6)
+            for k in range(4)] == [2] * 4
+    # single_layer: node per layer (Algorithm 1)
+    assert [pff_dag.node_of("single_layer", 4, layer=k, chapter=6)
+            for k in range(4)] == [0, 1, 2, 3]
+    # negatives: single_layer publishes from the LAST node, all_layers
+    # regenerates on the chapter's own node
+    assert pff_dag.neg_node_of("single_layer", 4, chapter=1) == 3
+    assert pff_dag.neg_node_of("all_layers", 4, chapter=1) == 1
+    with pytest.raises(ValueError):
+        pff_dag.node_of("gpipe", 4, layer=0, chapter=0)
+
+
+def test_dag_strict_neg_gates_next_chapter():
+    t = pff_dag.Task("train", 0, 2)
+    d_loose = pff_dag.deps(t, 2, has_neg=True, strict_neg=False)
+    d_strict = pff_dag.deps(t, 2, has_neg=True, strict_neg=True)
+    assert pff_dag.Task("neg_gen", -1, 1) not in d_loose
+    assert pff_dag.Task("neg_gen", -1, 1) in d_strict

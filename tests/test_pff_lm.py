@@ -50,6 +50,28 @@ def test_block_step_touches_only_its_block(setup):
                                   np.asarray(p2["embed"], np.float32))
 
 
+def test_pod_pipeline_step_finite_and_updates(setup):
+    """Regression for the pod-pipeline step: the shard_map body must
+    pmean grads over 'data' and psum the loss over 'stage' (unsound
+    replication claims used to NaN the weights on multi-axis meshes),
+    and the split-jit step must run on a trivial 1-device mesh."""
+    from repro.core import pff_pod
+    cfg, params, opt = setup
+    mesh = jax.make_mesh((1, 1, 1), ("stage", "data", "model"))
+    step = pff_pod.make_pff_pod_step(cfg, mesh, lr=1e-3)
+    B, S = 4, 32
+    inflight = pff_pod.init_inflight(cfg, B, S, stages=1)
+    with mesh:
+        for i, tokens in enumerate(data_lib.lm_batches(cfg.vocab, B, S, 2)):
+            params, opt, inflight, m = step(
+                params, opt, {"tokens": jnp.asarray(tokens)}, inflight,
+                i + 1)
+    assert bool(jnp.isfinite(m["loss_ff"]))
+    for leaf in jax.tree.leaves(params):
+        if jnp.issubdtype(leaf.dtype, jnp.floating):
+            assert bool(jnp.all(jnp.isfinite(leaf)))
+
+
 def test_chapter_schedule_records_and_learning(setup):
     cfg, _, _ = setup
 
