@@ -1,9 +1,15 @@
 PY := PYTHONPATH=src python
 
-.PHONY: test bench bench-smoke pff-exec-smoke
+.PHONY: test bench bench-smoke pff-exec-smoke api-smoke
 
 test:
 	$(PY) -m pytest -q
+
+# Facade selftest: every registered negatives/goodness/classifier
+# strategy through api.fit's sequential backend on a tiny task, plus
+# the deprecated entry points (must import, warn, and delegate).
+api-smoke:
+	$(PY) -m repro.api --selftest
 
 # Fast perf/correctness gate: FF hot-loop baseline (ref vs fused Pallas)
 # + kernel-vs-oracle error budget. Exits non-zero on a regression.

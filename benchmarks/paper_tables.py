@@ -25,7 +25,7 @@ import json
 import os
 import time
 
-from repro import data as data_lib
+from repro import api, data as data_lib
 from repro.configs.ff_mlp import FFMLPConfig
 from repro.core import pff
 
@@ -51,16 +51,15 @@ def bench_cfg(task_dim, *, quick=False, **kw):
 
 def run_model(cfg, task, label, results, federated=False):
     t0 = time.time()
-    if federated:
-        res = pff.train_federated(cfg, task, NODES)
-    else:
-        res = pff.train_ff_mlp(cfg, task)
+    res = api.fit(cfg, task,
+                  backend="federated" if federated else "sequential",
+                  num_nodes=NODES if federated else 1)
     wall = time.time() - t0
     row = {"model": label, "wall_s": round(wall, 1),
            "test_acc": round(res.test_acc * 100, 2)}
     for sched, n in (("sequential", 1), ("single_layer", NODES),
                      ("all_layers", NODES)):
-        sim = pff.simulate_schedule(res.records, sched, n)
+        sim = api.simulate(res, sched, n)
         row[sched] = {"time_s": round(sim.makespan, 1),
                       "speedup": round(sim.speedup, 2),
                       "util": round(sim.utilization, 2)}

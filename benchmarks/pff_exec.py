@@ -44,7 +44,7 @@ if "jax" not in sys.modules:                       # pragma: no cover
 import jax
 import jax.numpy as jnp
 
-from repro import data as data_lib
+from repro import api, data as data_lib
 from repro.configs.ff_mlp import FFMLPConfig
 from repro.core import pff, pff_exec
 
@@ -92,7 +92,7 @@ def run(quick=True, out_path=None):
     print(f"devices: {n_dev} x {devices[0].platform}")
 
     # canonical sequential trainer: weight-stream oracle + task timings
-    ref = pff.train_ff_mlp(cfg, task)
+    ref = api.fit(cfg, task, backend="sequential")
     print(f"sequential trainer: test acc {ref.test_acc:.4f}")
 
     results = {

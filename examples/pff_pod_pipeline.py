@@ -20,10 +20,10 @@ import time
 import jax
 import jax.numpy as jnp
 
-from repro import data, optim
+from repro import api, data, optim
 from repro.configs import get_config
 from repro.configs.ff_mlp import FFMLPConfig
-from repro.core import pff, pff_exec, pff_pod
+from repro.core import pff_exec, pff_pod
 from repro.models import transformer
 
 # --- 1. the paper's All-Layers schedule, executed for real ----------------
@@ -33,15 +33,18 @@ mlp_cfg = FFMLPConfig(layer_sizes=(784, 256, 256), epochs=8, splits=8,
                       batch_size=64, seed=0)
 mlp_task = data.mnist_like(n_train=1024, n_test=200)
 print(f"All-Layers PFF on {NODES} of {len(jax.devices())} host devices:")
-seq = pff.train_ff_mlp(mlp_cfg, mlp_task)          # canonical + timings
-res = pff_exec.run_pff_exec(mlp_cfg, mlp_task, "all_layers", NODES)
-sim = pff.simulate_schedule(seq.records, "all_layers", NODES)
+seq = api.fit(mlp_cfg, mlp_task)                   # canonical + timings
+res = api.fit(mlp_cfg, mlp_task, backend="executor",
+              schedule="all_layers", num_nodes=NODES)
+sim = api.simulate(seq, "all_layers", NODES)
 same = pff_exec.params_bit_equal(seq.params, res.params)
 print(f"  measured makespan {res.makespan:.2f}s | simulator predicts "
       f"{sim.makespan:.2f}s (speedup {sim.speedup:.2f}x)")
 print(f"  distributed weight stream bit-identical to sequential: {same}")
 
 # --- 2. beyond-paper: pipeline stages over a TPU-style mesh ---------------
+# (api.fit(cfg, backend="pod", num_nodes=S) runs this on a (S, 1, 1)
+# mesh; build the mesh by hand, as here, for data/model parallelism too)
 cfg = get_config("tinyllama-1.1b").reduced()
 cfg = dataclasses.replace(cfg, num_layers=4, groups=((("attn",), 4),))
 mesh = jax.make_mesh((2, 2, 2), ("stage", "data", "model"))

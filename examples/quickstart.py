@@ -1,33 +1,45 @@
 """Quickstart: train the paper's FF MLP on the synthetic MNIST-like task
-and evaluate with both prediction modes, then simulate the PFF schedules.
+through the ``repro.api`` facade, evaluate the classifier that was
+actually trained, then simulate the PFF schedules from the measured task
+timings.
 
   PYTHONPATH=src python examples/quickstart.py
 """
-from repro import data
+from repro import api, data
 from repro.configs.ff_mlp import FFMLPConfig
-from repro.core import ff_mlp, pff
 
 # scaled-down paper config (paper: [784, 2000 x4], E=100, S=100)
 task = data.mnist_like(n_train=2560, n_test=500)
 cfg = FFMLPConfig(
     layer_sizes=(task.dim, 400, 400, 400),
     epochs=60, splits=6,
-    neg_mode="random",          # adaptive | fixed | random
-    classifier="goodness",      # goodness | softmax
+    neg_mode="random",          # any of api.negatives.names()
+    classifier="goodness",      # any of api.classifier.names()
 )
 
-print("training FF (sequential chapter schedule)...")
-result = pff.train_ff_mlp(cfg, task, probe_every=2, verbose=True)
-print(f"\nGoodness prediction accuracy: {result.test_acc:.4f}")
+print("training FF (sequential chapter schedule via api.fit)...")
+result = api.fit(cfg, task, probe_every=2, verbose=True)
 
-soft_acc = ff_mlp.accuracy(result.params, task.x_test, task.y_test,
-                           cfg.num_classes, mode="softmax")
-print(f"Softmax head accuracy:        {soft_acc:.4f} "
-      "(head trained only when classifier='softmax')")
+# Evaluate ONLY classifiers that were actually trained: the softmax head
+# is a separate chapter task that exists iff classifier="softmax" — an
+# untrained head would report chance-level "accuracy".
+from repro.core import ff_mlp
 
-print("\nPFF schedules (from measured task durations):")
+print(f"\n{cfg.classifier.capitalize()} prediction accuracy: "
+      f"{result.test_acc:.4f}")
+if cfg.classifier == "softmax":
+    # goodness prediction needs no head — it is always available
+    good_acc = ff_mlp.accuracy(result.params, task.x_test, task.y_test,
+                               cfg.num_classes, mode="goodness")
+    print(f"Goodness prediction accuracy: {good_acc:.4f}")
+else:
+    print("Softmax head: not trained with classifier="
+          f"{cfg.classifier!r} — rerun with classifier=\"softmax\" to "
+          "compare both prediction modes.")
+
+print("\nPFF schedules (simulated from measured task durations):")
 for sched, n in (("sequential", 1), ("single_layer", 4),
                  ("all_layers", 4)):
-    sim = pff.simulate_schedule(result.records, sched, n)
+    sim = api.simulate(result, sched, n)
     print(f"  {sched:13s} N={n}: {sim.makespan:7.1f}s "
           f"speedup x{sim.speedup:4.2f} utilization {sim.utilization:.2f}")

@@ -1,0 +1,336 @@
+"""``repro.api`` — the one training facade for the paper's FF/PFF system.
+
+The paper's point is that ONE chapter-task DAG can be driven by many
+schedules; this module is the one entry point that drives it:
+
+    from repro import api, data
+    from repro.configs.ff_mlp import FFMLPConfig
+
+    task = data.mnist_like(n_train=2560, n_test=500)
+    cfg = FFMLPConfig(layer_sizes=(784, 400, 400), epochs=60, splits=6)
+
+    res = api.fit(cfg, task)                                # sequential
+    res = api.fit(cfg, task, backend="federated", num_nodes=4)
+    res = api.fit(cfg, task, backend="executor",            # real devices
+                  schedule="all_layers", num_nodes=4)
+    res = api.fit(cfg, task, backend="simulate",            # event sim
+                  schedule="single_layer", num_nodes=4)
+
+Every backend returns the same ``FitResult`` (params, per-task records,
+test accuracy, makespan/speedup/utilization when applicable, profile).
+Strategy variation — negatives, goodness objective, classifier — is
+config-driven through three registries (``api.negatives``,
+``api.goodness``, ``api.classifier``); register your own with
+``api.register_negatives`` & co and reference it by name in the config.
+
+Backends
+--------
+sequential  the canonical chapter-schedule trainer (times every task;
+            its records feed the simulator and the paper tables).
+federated   the same trainer on node-local shards (Federated PFF §4.3).
+executor    the REAL multi-device executor: one ``jax.device`` per paper
+            node, async dispatch, ``device_put`` hand-off — bit-exact
+            vs ``sequential`` (the CI oracle). Needs ``schedule`` and
+            ``num_nodes`` <= len(jax.devices()).
+simulate    trains sequentially once, then replays the measured task
+            timings through the event-driven schedule simulator.
+pod         beyond-paper: the PFF pipeline over a (stage, data, model)
+            TPU-style mesh for transformer LM configs
+            (``repro.core.pff_pod``); ``num_nodes`` = pipeline stages.
+
+Deprecated entry points ``pff.train_ff_mlp``, ``pff.train_federated``
+and ``pff_exec.run_pff_exec`` delegate here with a DeprecationWarning.
+
+``python -m repro.api --selftest`` (= ``make api-smoke``) runs every
+registered strategy through the sequential backend on a tiny task and
+checks the deprecation shims.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional
+
+from repro import data as data_lib
+from repro.core import pff, pff_exec, strategies
+from repro.core.strategies import (          # re-exported registry surface
+    classifier, goodness, negatives,
+    register_classifier, register_goodness, register_negatives,
+)
+
+__all__ = [
+    "fit", "simulate", "FitResult", "BACKENDS",
+    "negatives", "goodness", "classifier",
+    "register_negatives", "register_goodness", "register_classifier",
+]
+
+BACKENDS = ("sequential", "simulate", "executor", "federated", "pod")
+
+
+@dataclasses.dataclass
+class FitResult:
+    """What every backend returns. Fields that a backend cannot measure
+    stay None (e.g. ``makespan`` for plain sequential training).
+    ``raw`` keeps the backend-native result object (TrainResult /
+    ExecResult / SimResult / pod history) for the deprecation shims and
+    power users."""
+    backend: str
+    cfg: object
+    params: Optional[dict] = None
+    schedule: Optional[str] = None
+    num_nodes: int = 1
+    records: Optional[List[pff.TaskRecord]] = None
+    test_acc: Optional[float] = None
+    train_acc: Optional[float] = None
+    history: list = dataclasses.field(default_factory=list)
+    makespan: Optional[float] = None
+    speedup: Optional[float] = None
+    utilization: Optional[float] = None
+    sim: Optional[pff.SimResult] = None
+    profile: Optional[dict] = None
+    raw: object = None
+
+
+def _validate_strategies(cfg):
+    """Fail fast with the registry's helpful errors + pairing checks."""
+    good = strategies.goodness.get(cfg.goodness_fn)
+    strategies.negatives.get(cfg.neg_mode)
+    cls = strategies.classifier.get(cfg.classifier)
+    if cls.requires_goodness and cfg.goodness_fn != cls.requires_goodness:
+        raise ValueError(
+            f"classifier {cfg.classifier!r} reads parameters trained by "
+            f"goodness_fn={cls.requires_goodness!r}, but the config has "
+            f"goodness_fn={cfg.goodness_fn!r}")
+    return good
+
+
+def fit(cfg, task=None, *, backend="sequential", schedule=None,
+        num_nodes=1, probe_every=0, verbose=False, profile=False,
+        devices=None, comm_time=0.0, steps=40, batch=8, seq=64,
+        lr=1e-3) -> FitResult:
+    """Train ``cfg`` on ``task`` with the chosen backend. See the module
+    docstring for the backend table.
+
+    schedule: PFF schedule for the ``executor``/``simulate`` backends
+    (default "all_layers"; "sequential" is forced when num_nodes == 1).
+    probe_every/verbose: chapter-level accuracy probes (sequential /
+    federated backends).
+    profile: executor backend — collect per-task records + node busy
+    times (blocks after every task; run again without it for makespan).
+    devices: executor backend — explicit device list.
+    comm_time: simulate backend — per-DAG-edge cross-node hand-off cost.
+    steps/batch/seq/lr: pod backend — pipeline run length and shapes
+    (``task`` may be an iterable of token blocks, or None to use the
+    synthetic LM corpus).
+    """
+    if backend not in BACKENDS:
+        raise ValueError(f"unknown backend {backend!r}; expected one of "
+                         f"{BACKENDS}")
+    if backend == "pod":
+        return _fit_pod(cfg, task, num_nodes=num_nodes, steps=steps,
+                        batch=batch, seq=seq, lr=lr, verbose=verbose)
+
+    _validate_strategies(cfg)
+    if backend == "sequential":
+        res = pff.run_chapter_schedule(cfg, task, probe_every=probe_every,
+                                       verbose=verbose)
+        return FitResult(backend=backend, cfg=cfg, params=res.params,
+                         schedule="sequential", num_nodes=1,
+                         records=res.records, test_acc=res.test_acc,
+                         train_acc=res.train_acc, history=res.history,
+                         raw=res)
+
+    if backend == "federated":
+        res = pff.run_federated_schedule(cfg, task, num_nodes,
+                                         probe_every=probe_every,
+                                         verbose=verbose)
+        return FitResult(backend=backend, cfg=cfg, params=res.params,
+                         schedule="federated", num_nodes=num_nodes,
+                         records=res.records, test_acc=res.test_acc,
+                         train_acc=res.train_acc, history=res.history,
+                         raw=res)
+
+    schedule = schedule or ("sequential" if num_nodes == 1
+                            else "all_layers")
+    if backend == "executor":
+        ex = pff_exec.PFFExecutor(cfg, task, schedule, num_nodes,
+                                  devices=devices)
+        res = ex.run(profile=profile)
+        return FitResult(backend=backend, cfg=cfg, params=res.params,
+                         schedule=schedule, num_nodes=num_nodes,
+                         records=res.records, test_acc=res.test_acc,
+                         makespan=res.makespan,
+                         profile=({"node_busy": res.node_busy}
+                                  if profile else None),
+                         raw=res)
+
+    # backend == "simulate": canonical training once, then replay its
+    # measured task timings under the schedule's node assignment
+    res = pff.run_chapter_schedule(cfg, task, probe_every=probe_every,
+                                   verbose=verbose)
+    sim = pff.simulate_schedule(res.records, schedule, num_nodes,
+                                comm_time=comm_time)
+    return FitResult(backend=backend, cfg=cfg, params=res.params,
+                     schedule=schedule, num_nodes=num_nodes,
+                     records=res.records, test_acc=res.test_acc,
+                     train_acc=res.train_acc, history=res.history,
+                     makespan=sim.makespan, speedup=sim.speedup,
+                     utilization=sim.utilization, sim=sim, raw=res)
+
+
+def simulate(result_or_records, schedule, num_nodes,
+             **kw) -> pff.SimResult:
+    """Replay a training run's task records under another schedule —
+    accepts a ``FitResult`` (sequential/federated/simulate backends) or
+    a raw record list."""
+    records = getattr(result_or_records, "records", result_or_records)
+    if records is None:
+        raise ValueError("no task records on this result (executor "
+                         "results carry records only with profile=True)")
+    return pff.simulate_schedule(records, schedule, num_nodes, **kw)
+
+
+def _fit_pod(cfg, task, *, num_nodes, steps, batch, seq, lr, verbose):
+    """Beyond-paper pod-pipeline backend (transformer LM configs only).
+
+    NOTE: ``pff_pod``'s step function is jitted internally as TWO
+    executables (glue, pipeline) — this driver must NOT wrap it in an
+    outer jax.jit (jax-0.4.x GSPMD miscompile; see pff_pod docstring).
+    """
+    import jax
+    import jax.numpy as jnp
+
+    from repro import optim
+    from repro.core import pff_pod
+    from repro.models import transformer
+
+    if not hasattr(cfg, "groups"):
+        raise ValueError(
+            "backend=\"pod\" expects a transformer LM config "
+            "(repro.configs.get_config(...)); FF-MLP configs run on the "
+            "sequential/federated/executor/simulate backends")
+    stages = num_nodes
+    if stages < 1 or stages > len(jax.devices()):
+        raise ValueError(f"pod backend needs 1 <= num_nodes <= "
+                         f"{len(jax.devices())} devices, got {stages}")
+    mesh = jax.make_mesh((stages, 1, 1), ("stage", "data", "model"))
+    key = jax.random.PRNGKey(getattr(cfg, "seed", 0) or 0)
+    params = transformer.init(key, cfg)
+    opt = optim.adam_init(params)
+    inflight = pff_pod.init_inflight(cfg, batch, seq, stages=stages)
+    step_fn = pff_pod.make_pff_pod_step(cfg, mesh, lr=lr)
+    batches = (task if task is not None
+               else data_lib.lm_batches(cfg.vocab, batch, seq, steps))
+    history = []
+    import time
+    t0 = time.perf_counter()
+    with mesh:
+        for i, tokens in enumerate(batches):
+            params, opt, inflight, m = step_fn(
+                params, opt, {"tokens": jnp.asarray(tokens)}, inflight,
+                i + 1)
+            history.append((i + 1, float(m["loss_ff"])))
+            if verbose and (i + 1) % 10 == 0:
+                print(f"  pod step {i + 1}: FF loss "
+                      f"{history[-1][1]:.4f}")
+    jax.block_until_ready(params)
+    makespan = time.perf_counter() - t0
+    return FitResult(backend="pod", cfg=cfg, params=params,
+                     schedule="pod_pipeline", num_nodes=stages,
+                     history=history, makespan=makespan, raw=history)
+
+
+# ---------------------------------------------------------------------------
+# Selftest: every registered strategy x the sequential backend, plus the
+# deprecation shims. ``make api-smoke`` runs this.
+# ---------------------------------------------------------------------------
+
+def _selftest_cases():
+    """One tiny sequential run per registered strategy (deduplicated)."""
+    from repro.configs.ff_mlp import FFMLPConfig
+
+    base = dict(layer_sizes=(784, 64, 64), epochs=2, splits=2,
+                batch_size=64, seed=0)
+    cases = {}
+    for name in strategies.negatives.names():
+        cases[f"negatives:{name}"] = FFMLPConfig(
+            neg_mode=name, classifier="goodness", goodness_fn="sumsq",
+            **base)
+    for name in strategies.goodness.names():
+        cases[f"goodness:{name}"] = FFMLPConfig(
+            neg_mode="random", classifier="goodness", goodness_fn=name,
+            **base)
+    for name in strategies.classifier.names():
+        strat = strategies.classifier.get(name)
+        cases[f"classifier:{name}"] = FFMLPConfig(
+            neg_mode="random", classifier=name,
+            goodness_fn=strat.requires_goodness or "sumsq", **base)
+    return cases
+
+
+def _selftest(argv=None):
+    import argparse
+    import warnings
+
+    import numpy as np
+
+    p = argparse.ArgumentParser(description="repro.api facade selftest")
+    p.add_argument("--selftest", action="store_true",
+                   help="accepted for symmetry with `make api-smoke`")
+    p.parse_args(argv)
+
+    task = data_lib.mnist_like(n_train=256, n_test=128)
+    failures = []
+    for label, cfg in _selftest_cases().items():
+        try:
+            res = fit(cfg, task, backend="sequential")
+            acc = res.test_acc
+            flat = np.concatenate([np.asarray(lp["w"]).ravel()
+                                   for lp in res.params["layers"]])
+            if not (0.0 <= acc <= 1.0) or not np.all(np.isfinite(flat)):
+                failures.append(f"{label}: degenerate result "
+                                f"(acc={acc}, finite={np.all(np.isfinite(flat))})")
+            print(f"  {label:24s} acc={acc:.3f} "
+                  f"records={len(res.records)} OK")
+        except Exception as e:                      # noqa: BLE001
+            failures.append(f"{label}: {type(e).__name__}: {e}")
+            print(f"  {label:24s} FAILED: {e}")
+
+    # deprecated names must still work AND warn
+    from repro.configs.ff_mlp import FFMLPConfig
+    shim_cfg = FFMLPConfig(layer_sizes=(784, 32), epochs=2, splits=2,
+                           neg_mode="random", classifier="goodness",
+                           batch_size=64, seed=0)
+    shims = (
+        ("pff.train_ff_mlp", lambda: pff.train_ff_mlp(shim_cfg, task)),
+        ("pff.train_federated",
+         lambda: pff.train_federated(shim_cfg, task, 2)),
+        ("pff_exec.run_pff_exec",
+         lambda: pff_exec.run_pff_exec(shim_cfg, task, "sequential", 1)),
+    )
+    for name, call in shims:
+        with warnings.catch_warnings(record=True) as caught:
+            warnings.simplefilter("always")
+            try:
+                out = call()
+            except Exception as e:                  # noqa: BLE001
+                failures.append(f"{name}: {type(e).__name__}: {e}")
+                print(f"  shim {name:24s} FAILED: {e}")
+                continue
+            if not any(issubclass(w.category, DeprecationWarning)
+                       for w in caught):
+                failures.append(f"{name}: no DeprecationWarning emitted")
+            elif out is None:
+                failures.append(f"{name}: shim returned None")
+            else:
+                print(f"  shim {name:24s} warns + delegates OK")
+
+    if failures:
+        print("API SELFTEST FAILED:\n  " + "\n  ".join(failures))
+        return 1
+    print(f"api selftest OK: {len(_selftest_cases())} strategy cases x "
+          "sequential backend + deprecation shims")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(_selftest())

@@ -26,13 +26,33 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import optim
-from repro.core import ff
+from repro.core import ff, strategies
 from repro.kernels import ops
 
 
 def _norm(x, eps=1e-8):
     """Hinton's length normalization between FF layers."""
     return x / (jnp.linalg.norm(x, axis=-1, keepdims=True) + eps)
+
+
+def _norm_via_goodness(y, g, eps=1e-8):
+    """``_norm(y)`` given ``g = sum(y^2, -1)`` — the fused kernel's
+    goodness output IS the squared norm, so the normalizer comes free
+    (sqrt(sum(y^2)) is exactly what ``jnp.linalg.norm`` computes)."""
+    return y / (jnp.sqrt(g)[..., None] + eps)
+
+
+def fwd_norm(lp, x, impl="auto"):
+    """One layer forward + Hinton length-norm — the inter-layer hand-off
+    shared by the sequential trainer and the real executor (weight-stream
+    bit-exactness depends on BOTH calling exactly this). One fused
+    ``ff_dense`` dispatch: activation and normalizer in a single pass."""
+    y, g = ops.ff_dense(x, lp["w"], lp["b"], impl=impl)
+    return _norm_via_goodness(y, g)
+
+def kernel_impl(cfg):
+    """The config's ``ops.ff_dense`` path (auto | pallas | ref)."""
+    return getattr(cfg, "kernel_impl", "auto")
 
 
 # ---------------------------------------------------------------------------
@@ -54,13 +74,9 @@ def init(key, cfg):
                                    jnp.float32) * feat_dim ** -0.5,
             "b": jnp.zeros((cfg.num_classes,))}
     params = {"layers": layers, "head": head}
-    if cfg.goodness_fn == "perf_opt":
-        kk = jax.random.split(ks[-1], n_hidden)
-        params["local_heads"] = [
-            {"w": jax.random.normal(kk[i], (sizes[i + 1], cfg.num_classes),
-                                    jnp.float32) * sizes[i + 1] ** -0.5,
-             "b": jnp.zeros((cfg.num_classes,))}
-            for i in range(n_hidden)]
+    extras_init = strategies.goodness.get(cfg.goodness_fn).init_extras
+    if extras_init is not None:
+        params.update(extras_init(ks[-1], cfg))
     return params
 
 
@@ -75,16 +91,6 @@ def opt_init(params):
 
 def layer_apply(lp, x):
     return jax.nn.relu(x @ lp["w"] + lp["b"])
-
-
-def forward_feats(layers, x):
-    """Returns list of per-layer activations (pre-normalization)."""
-    feats = []
-    h = x
-    for lp in layers:
-        h = layer_apply(lp, _norm(h))
-        feats.append(h)
-    return feats
 
 
 # ---------------------------------------------------------------------------
@@ -172,18 +178,22 @@ def train_layer_chapter(lp, opt, x_pos, x_neg, lrs, key, *, batch, epochs,
     return lp, opt
 
 
-def _perf_opt_loss(lp_and_head, xb, yb):
+def _perf_opt_loss(lp_and_head, xb, yb, impl="auto"):
+    """§4.4 local-head loss, dense+norm routed through the fused kernel:
+    the layer's activation AND its normalizer come from one ``ff_dense``
+    dispatch (the goodness output is the squared norm); only the small
+    (N, C) head matmul stays a plain dot."""
     lp, head = lp_and_head
-    h = layer_apply(lp, xb)
-    logits = _norm(h) @ head["w"] + head["b"]
+    y, g = ops.ff_dense(xb, lp["w"], lp["b"], impl=impl)
+    logits = _norm_via_goodness(y, g) @ head["w"] + head["b"]
     return jnp.mean(
         -jax.nn.log_softmax(logits)[jnp.arange(xb.shape[0]), yb])
 
 
-@functools.partial(jax.jit, static_argnames=("batch", "epochs"),
+@functools.partial(jax.jit, static_argnames=("batch", "epochs", "impl"),
                    donate_argnums=(0, 1, 2, 3))
 def train_layer_chapter_perf_opt(lp, head, opt, opt_h, x, y, lrs, key, *,
-                                 batch, epochs):
+                                 batch, epochs, impl="auto"):
     """Performance-Optimized goodness (paper §4.4): train (layer, local
     softmax head) with two-layer backprop; no negative data.
     lp/head/opt/opt_h are donated."""
@@ -197,7 +207,8 @@ def train_layer_chapter_perf_opt(lp, head, opt, opt_h, x, y, lrs, key, *,
         def batch_body(carry, bi):
             lp, head, opt, opt_h, step = carry
             idx = jax.lax.dynamic_slice_in_dim(perm, bi * batch, batch)
-            g_lp, g_h = jax.grad(_perf_opt_loss)((lp, head), x[idx], y[idx])
+            g_lp, g_h = jax.grad(_perf_opt_loss)((lp, head), x[idx], y[idx],
+                                                 impl)
             step = step + 1
             lp, opt = optim.adam_update(lp, g_lp, opt, lr=lrs[ei], step=step)
             head, opt_h = optim.adam_update(head, g_h, opt_h, lr=lrs[ei],
@@ -287,48 +298,161 @@ def goodness_class_scores(params, x, num_classes, impl="auto"):
     return scores.reshape(num_classes, B).T
 
 
-@jax.jit
-def softmax_feats(layers_params, x):
+@functools.partial(jax.jit, static_argnames=("impl",))
+def softmax_feats(layers_params, x, impl="auto"):
     """Normalized activations of layers 2..L, concatenated (all layers
-    for a 1-hidden-layer net)."""
-    feats = forward_feats(layers_params, x)
+    for a 1-hidden-layer net). Each layer is one fused ``ff_dense``
+    dispatch: the goodness output doubles as the feature normalizer."""
+    feats = []
+    h = x
+    for lp in layers_params:
+        y, g = ops.ff_dense(_norm(h), lp["w"], lp["b"], impl=impl)
+        feats.append(_norm_via_goodness(y, g))
+        h = y
     if len(feats) > 1:
         feats = feats[1:]
-    return jnp.concatenate([_norm(f) for f in feats], axis=-1)
+    return jnp.concatenate(feats, axis=-1)
 
 
-@functools.partial(jax.jit, static_argnames=("last_only",))
-def perf_opt_scores(params, x, last_only=False):
+@functools.partial(jax.jit, static_argnames=("last_only", "impl"))
+def perf_opt_scores(params, x, last_only=False, impl="auto"):
     """Performance-Optimized prediction (paper Table 4): sum the local
-    classifier logits over all layers, or use only the last layer's."""
+    classifier logits over all layers, or use only the last layer's.
+    The per-layer dense+norm runs on the fused kernel path."""
     h = x
     total = None
     for lp, head in zip(params["layers"], params["local_heads"]):
-        h = layer_apply(lp, _norm(h))
-        logits = jax.nn.log_softmax(_norm(h) @ head["w"] + head["b"])
+        y, g = ops.ff_dense(_norm(h), lp["w"], lp["b"], impl=impl)
+        hn = _norm_via_goodness(y, g)
+        logits = jax.nn.log_softmax(hn @ head["w"] + head["b"])
         total = logits if (total is None or last_only) else total + logits
+        h = y
     return total
 
 
+def class_scores(params, x, num_classes, mode="goodness", impl="auto"):
+    """(B, C) label scores via the classifier strategy registry."""
+    strat = strategies.classifier.get(mode)
+    return strat.scores(params, x, num_classes=num_classes, impl=impl)
+
+
 def predict(params, x, num_classes, mode="goodness", impl="auto"):
-    if mode == "goodness":
-        scores = goodness_class_scores(params, x, num_classes, impl=impl)
-    elif mode in ("perf_opt_all", "perf_opt_last"):
-        xn = ff.overlay_neutral(x, num_classes)
-        scores = perf_opt_scores(params, xn,
-                                 last_only=mode == "perf_opt_last")
-    else:
-        xn = ff.overlay_neutral(x, num_classes)
-        feats = softmax_feats(params["layers"], xn)
-        scores = feats @ params["head"]["w"] + params["head"]["b"]
-    return jnp.argmax(scores, axis=1)
+    return jnp.argmax(class_scores(params, x, num_classes, mode,
+                                   impl=impl), axis=1)
+
+
+def chunked_scores(score_fn, x, chunk=2000):
+    """Applies ``score_fn`` over ``x`` in test-time chunks (bounding the
+    prediction sweep's memory: each chunk expands C-fold inside the
+    goodness scorer) and concatenates along axis 0. The ONE chunked
+    evaluation loop — the trainers' adaptive-negatives scoring and
+    ``accuracy`` both run through here."""
+    outs = [score_fn(jnp.asarray(x[i:i + chunk]))
+            for i in range(0, len(x), chunk)]
+    return jnp.concatenate(outs, axis=0)
 
 
 def accuracy(params, x, y, num_classes, mode="goodness", chunk=2000,
              impl="auto"):
-    correct = 0
-    for i in range(0, len(x), chunk):
-        pred = predict(params, jnp.asarray(x[i:i + chunk]), num_classes,
-                       mode, impl=impl)
-        correct += int(jnp.sum(pred == jnp.asarray(y[i:i + chunk])))
-    return correct / len(x)
+    scores = chunked_scores(
+        lambda xc: class_scores(params, xc, num_classes, mode, impl=impl),
+        x, chunk=chunk)
+    pred = jnp.argmax(scores, axis=1)
+    return float(jnp.mean(pred == jnp.asarray(y)))
+
+
+# ---------------------------------------------------------------------------
+# Builtin strategies (see repro.core.strategies; surfaced via repro.api)
+# ---------------------------------------------------------------------------
+
+def _sumsq_get_state(params, opt, k):
+    return (params["layers"][k], opt["layers"][k])
+
+
+def _sumsq_set_state(params, opt, k, state):
+    params["layers"][k], opt["layers"][k] = state
+
+
+def _sumsq_train_chapter(state, acts, extras, lrs, key, *, cfg, epochs):
+    lp, o = state
+    xp, xn = acts
+    return train_layer_chapter(
+        lp, o, xp, xn, lrs, key, batch=cfg.batch_size, epochs=epochs,
+        theta=cfg.theta, peer_w=cfg.peer_w, impl=kernel_impl(cfg))
+
+
+def _perf_opt_init_extras(key, cfg):
+    sizes = cfg.layer_sizes
+    n_hidden = len(sizes) - 1
+    kk = jax.random.split(key, n_hidden)
+    return {"local_heads": [
+        {"w": jax.random.normal(kk[i], (sizes[i + 1], cfg.num_classes),
+                                jnp.float32) * sizes[i + 1] ** -0.5,
+         "b": jnp.zeros((cfg.num_classes,))}
+        for i in range(n_hidden)]}
+
+
+def _perf_opt_get_state(params, opt, k):
+    return (params["layers"][k], params["local_heads"][k],
+            opt["layers"][k], opt["local_heads"][k])
+
+
+def _perf_opt_set_state(params, opt, k, state):
+    (params["layers"][k], params["local_heads"][k],
+     opt["layers"][k], opt["local_heads"][k]) = state
+
+
+def _perf_opt_train_chapter(state, acts, extras, lrs, key, *, cfg, epochs):
+    lp, head, o, oh = state
+    (xk,) = acts
+    (y,) = extras
+    return train_layer_chapter_perf_opt(
+        lp, head, o, oh, xk, y, lrs, key, batch=cfg.batch_size,
+        epochs=epochs, impl=kernel_impl(cfg))
+
+
+strategies.register_goodness("sumsq", strategies.GoodnessStrategy(
+    name="sumsq", uses_negatives=True,
+    get_state=_sumsq_get_state, set_state=_sumsq_set_state,
+    train_chapter=_sumsq_train_chapter,
+    export=lambda states: {"layers": [s[0] for s in states]},
+    eval_mode=lambda cfg: cfg.classifier))
+
+strategies.register_goodness("perf_opt", strategies.GoodnessStrategy(
+    name="perf_opt", uses_negatives=False,
+    get_state=_perf_opt_get_state, set_state=_perf_opt_set_state,
+    train_chapter=_perf_opt_train_chapter,
+    export=lambda states: {"layers": [s[0] for s in states],
+                           "local_heads": [s[1] for s in states]},
+    # honor an explicitly chosen classifier; only remap the config
+    # DEFAULT ("goodness"), which scores label overlays the §4.4 layers
+    # never saw — the strategy's own heads are the meaningful default
+    eval_mode=lambda cfg: ("perf_opt_all" if cfg.classifier == "goodness"
+                           else cfg.classifier),
+    init_extras=_perf_opt_init_extras))
+
+
+def _goodness_cls_scores(params, x, *, num_classes, impl="auto"):
+    return goodness_class_scores(params, x, num_classes, impl=impl)
+
+
+def _softmax_cls_scores(params, x, *, num_classes, impl="auto"):
+    xn = ff.overlay_neutral(x, num_classes)
+    feats = softmax_feats(params["layers"], xn, impl=impl)
+    return feats @ params["head"]["w"] + params["head"]["b"]
+
+
+def _perf_opt_cls_scores(last_only):
+    def scores(params, x, *, num_classes, impl="auto"):
+        xn = ff.overlay_neutral(x, num_classes)
+        return perf_opt_scores(params, xn, last_only=last_only, impl=impl)
+    return scores
+
+
+strategies.register_classifier("goodness", _goodness_cls_scores)
+strategies.register_classifier("softmax", _softmax_cls_scores,
+                               trains_head=True)
+strategies.register_classifier("perf_opt_all", _perf_opt_cls_scores(False),
+                               requires_goodness="perf_opt")
+strategies.register_classifier("perf_opt_last", _perf_opt_cls_scores(True),
+                               requires_goodness="perf_opt")

@@ -14,7 +14,8 @@ The PFF machinery is split across three modules:
     dependency edges, per-schedule node assignments). Single source of
     truth consumed by both the simulator and the executor.
   * this module — (a) the canonical sequential trainer
-    (``train_ff_mlp``), which executes the chapter schedule once, timing
+    (``run_chapter_schedule``; drive it via ``repro.api.fit``), which
+    executes the chapter schedule once, timing
     every task, and (b) an event-driven simulator
     (``simulate_schedule``) that replays those timings under each
     schedule's node assignment to obtain distributed training time,
@@ -28,7 +29,8 @@ The PFF machinery is split across three modules:
 
 Federated PFF additionally changes the data each chapter sees
 (node-local shards), so it is always trained for real with per-node data
-(``train_federated`` here, or the executor with schedule="federated").
+(``run_federated_schedule`` here, or the executor with
+schedule="federated"; both via ``repro.api.fit``).
 
 AdaptiveNEG adds a per-chapter negative-regeneration task; in Single-Layer
 the LAST node generates and publishes negatives (serializing), while in
@@ -39,6 +41,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
+import warnings
 from typing import Dict, List, Optional, Tuple
 
 import jax
@@ -46,7 +49,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import data as data_lib, optim
-from repro.core import ff, ff_mlp, pff_dag
+from repro.core import ff, ff_mlp, pff_dag, strategies
 
 
 # ---------------------------------------------------------------------------
@@ -71,23 +74,22 @@ class TrainResult:
     history: List[Tuple[int, float]]       # (chapter, test_acc) probes
 
 
-def _make_negatives(key, cfg, params, x, y, mode, class_scores=None):
-    """Returns negative-overlaid images (N, D)."""
-    if mode == "adaptive" and class_scores is not None:
-        neg_labels = ff.adaptive_wrong_labels(class_scores, y, key=key)
-    else:
-        neg_labels = ff.random_wrong_labels(key, y, cfg.num_classes)
-    return ff.overlay_label(x, neg_labels, cfg.num_classes)
+def run_chapter_schedule(cfg, task: data_lib.ImageTask, *, probe_every=0,
+                         node_data: Optional[List[np.ndarray]] = None,
+                         num_nodes: int = 1, verbose=False) -> TrainResult:
+    """Runs the canonical chapter schedule of the paper (the facade's
+    ``sequential`` / ``federated`` backends — call ``repro.api.fit``).
 
-
-def train_ff_mlp(cfg, task: data_lib.ImageTask, *, probe_every=0,
-                 node_data: Optional[List[np.ndarray]] = None,
-                 num_nodes: int = 1, verbose=False) -> TrainResult:
-    """Runs the canonical chapter schedule of the paper.
+    All strategy variation (negatives, goodness, classifier) comes from
+    the ``repro.core.strategies`` registries; this driver only walks the
+    chapter x layer task order and times every task.
 
     node_data: optional list of per-node index arrays (Federated PFF) —
     chapter c uses node (c % num_nodes)'s shard.
     """
+    good = strategies.goodness.get(cfg.goodness_fn)
+    neg = strategies.negatives.get(cfg.neg_mode)
+    cls = strategies.classifier.get(cfg.classifier)
     key = jax.random.PRNGKey(cfg.seed)
     params = ff_mlp.init(key, cfg)
     opt = ff_mlp.opt_init(params)
@@ -99,23 +101,25 @@ def train_ff_mlp(cfg, task: data_lib.ImageTask, *, probe_every=0,
     n_layers = len(params["layers"])
     x_all = jnp.asarray(task.x_train)
     y_all = jnp.asarray(task.y_train)
-    perf_opt = cfg.goodness_fn == "perf_opt"
-    impl = getattr(cfg, "kernel_impl", "auto")
+    impl = ff_mlp.kernel_impl(cfg)
+    has_neg = good.uses_negatives and neg.regenerates
 
     # Hoisted out of the chapter loop: label overlays and the layer-0
     # length-normalization are chapter-invariant (the positive overlay
     # never changes; the negative one changes only on regeneration), so
-    # recomputing them every chapter x layer was pure waste.
+    # recomputing them every chapter x layer would be pure waste.
     kneg = jax.random.fold_in(key, 999)
-    if not perf_opt:
+    if good.uses_negatives:
         # only the normalized forms are kept — the raw overlays would be
-        # ~190 MB of dead weight each at MNIST scale
+        # ~190 MB of dead weight each at MNIST scale. The initial
+        # negatives pass params=None/scores=None: every strategy degrades
+        # to key-only wrong labels before a model exists (the executor
+        # does the same, so custom strategies see one uniform contract).
         xp0 = ff_mlp._norm(ff.overlay_label(x_all, y_all, cfg.num_classes))
-        xn0 = ff_mlp._norm(_make_negatives(kneg, cfg, params, x_all, y_all,
-                                           "random"))
-    if perf_opt or cfg.classifier == "softmax":
+        xn0 = ff_mlp._norm(neg.fn(kneg, cfg, None, x_all, y_all, None))
+    if not good.uses_negatives or cls.trains_head:
         x_neutral = ff.overlay_neutral(x_all, cfg.num_classes)
-        if perf_opt:
+        if not good.uses_negatives:
             xk0 = ff_mlp._norm(x_neutral)
 
     for chapter in range(S):
@@ -131,50 +135,36 @@ def train_ff_mlp(cfg, task: data_lib.ImageTask, *, probe_every=0,
         lrs_head = lrs * (cfg.lr_softmax / cfg.lr_ff)
         kc = jax.random.fold_in(key, chapter)
 
-        if perf_opt:
-            xk = xk0 if idx is None else xk0[idx]
-            y_in = y_all if idx is None else y_all[idx]
-            for k in range(n_layers):
-                t0 = time.perf_counter()
-                lp, lh, o, oh = ff_mlp.train_layer_chapter_perf_opt(
-                    params["layers"][k], params["local_heads"][k],
-                    opt["layers"][k], opt["local_heads"][k],
-                    xk, y_in, lrs, jax.random.fold_in(kc, k),
-                    batch=cfg.batch_size, epochs=C)
-                jax.block_until_ready(lp)
-                params["layers"][k] = lp
-                params["local_heads"][k] = lh
-                opt["layers"][k], opt["local_heads"][k] = o, oh
-                if k + 1 < n_layers:
-                    xk = ff_mlp._norm(ff_mlp.layer_apply(lp, xk))
-                records.append(TaskRecord(
-                    "train", k, chapter, time.perf_counter() - t0))
+        # per-chapter inputs: activations flow layer-to-layer, extras
+        # (labels) do not
+        if good.uses_negatives:
+            acts = (xp0 if idx is None else xp0[idx],
+                    xn0 if idx is None else xn0[idx])
+            extras = ()
         else:
-            # xp/xn carry the normalized inputs of the current layer
-            xp = xp0 if idx is None else xp0[idx]
-            xn = xn0 if idx is None else xn0[idx]
-            for k in range(n_layers):
-                t0 = time.perf_counter()
-                lp, o = ff_mlp.train_layer_chapter(
-                    params["layers"][k], opt["layers"][k], xp, xn, lrs,
-                    jax.random.fold_in(kc, k), batch=cfg.batch_size,
-                    epochs=C, theta=cfg.theta, peer_w=cfg.peer_w,
-                    impl=impl)
-                jax.block_until_ready(lp)
-                params["layers"][k] = lp
-                opt["layers"][k] = o
+            acts = (xk0 if idx is None else xk0[idx],)
+            extras = (y_all if idx is None else y_all[idx],)
+
+        for k in range(n_layers):
+            t0 = time.perf_counter()
+            state = good.train_chapter(
+                good.get_state(params, opt, k), acts, extras, lrs,
+                jax.random.fold_in(kc, k), cfg=cfg, epochs=C)
+            jax.block_until_ready(state[0])
+            good.set_state(params, opt, k, state)
+            if k + 1 < n_layers:
                 # propagate data through the freshly-trained layer
-                if k + 1 < n_layers:
-                    xp = ff_mlp._norm(ff_mlp.layer_apply(lp, xp))
-                    xn = ff_mlp._norm(ff_mlp.layer_apply(lp, xn))
-                records.append(TaskRecord(
-                    "train", k, chapter, time.perf_counter() - t0))
+                acts = tuple(ff_mlp.fwd_norm(state[0], a, impl=impl)
+                             for a in acts)
+            records.append(TaskRecord(
+                "train", k, chapter, time.perf_counter() - t0))
 
         # softmax head (trained alongside, layer-local — paper §3)
-        if cfg.classifier == "softmax":
+        if cls.trains_head:
             t0 = time.perf_counter()
             xn_all = x_neutral if idx is None else x_neutral[idx]
-            feats = ff_mlp.softmax_feats(params["layers"], xn_all)
+            feats = ff_mlp.softmax_feats(params["layers"], xn_all,
+                                         impl=impl)
             params["head"], opt["head"] = ff_mlp.train_head_chapter(
                 params["head"], opt["head"], feats,
                 y_all if idx is None else y_all[idx],
@@ -185,27 +175,31 @@ def train_ff_mlp(cfg, task: data_lib.ImageTask, *, probe_every=0,
                 "head", n_layers, chapter, time.perf_counter() - t0))
 
         # negative regeneration (UpdateXNEG)
-        if not perf_opt and cfg.neg_mode in ("adaptive", "random"):
+        if has_neg:
             t0 = time.perf_counter()
+            # params travel with scores: only needs_scores strategies see
+            # the live model (key-only regen gets None on the executor's
+            # per-node path too — keep both drivers' contracts identical)
             scores = None
-            if cfg.neg_mode == "adaptive":
+            if neg.needs_scores:
                 scores = _class_scores_chunked(params, x_all, cfg)
-            xn0 = ff_mlp._norm(_make_negatives(
-                jax.random.fold_in(kneg, chapter), cfg, params,
-                x_all, y_all, cfg.neg_mode, scores))
+            xn0 = ff_mlp._norm(neg.fn(
+                jax.random.fold_in(kneg, chapter), cfg,
+                params if neg.needs_scores else None,
+                x_all, y_all, scores))
             jax.block_until_ready(xn0)
             records.append(TaskRecord(
                 "neg_gen", -1, chapter, time.perf_counter() - t0))
 
         if probe_every and (chapter + 1) % probe_every == 0:
             acc = ff_mlp.accuracy(params, task.x_test, task.y_test,
-                                  cfg.num_classes, cfg.classifier,
+                                  cfg.num_classes, good.eval_mode(cfg),
                                   impl=impl)
             history.append((chapter + 1, acc))
             if verbose:
                 print(f"  chapter {chapter + 1}/{S}: test acc {acc:.4f}")
 
-    mode = "perf_opt_all" if perf_opt else cfg.classifier
+    mode = good.eval_mode(cfg)
     test_acc = ff_mlp.accuracy(params, task.x_test, task.y_test,
                                cfg.num_classes, mode, impl=impl)
     train_acc = ff_mlp.accuracy(params, task.x_train[:2000],
@@ -215,12 +209,14 @@ def train_ff_mlp(cfg, task: data_lib.ImageTask, *, probe_every=0,
 
 
 def _class_scores_chunked(params, x, cfg, chunk=2000):
-    impl = getattr(cfg, "kernel_impl", "auto")
-    outs = []
-    for i in range(0, x.shape[0], chunk):
-        outs.append(ff_mlp.goodness_class_scores(
-            params, x[i:i + chunk], cfg.num_classes, impl=impl))
-    return jnp.concatenate(outs, axis=0)
+    """Full-train-set goodness scores for AdaptiveNEG regeneration —
+    one shared chunked loop (``ff_mlp.chunked_scores``) with accuracy()
+    and the facade's eval step."""
+    impl = ff_mlp.kernel_impl(cfg)
+    return ff_mlp.chunked_scores(
+        lambda xc: ff_mlp.goodness_class_scores(params, xc,
+                                                cfg.num_classes, impl=impl),
+        x, chunk=chunk)
 
 
 # ---------------------------------------------------------------------------
@@ -277,13 +273,16 @@ def simulate_schedule(records: List[TaskRecord], schedule: str,
     L, S = len(layers), len(chapters)
     has_head = any(k == "head" for k, _ in dur)
     has_neg = any(k == "neg_gen" for k, _ in dur)
+    has_local = any(k == "local_head" for k, _ in dur)
 
     t_train = {k: dur[("train", k)] for k in layers}
     t_head = dur.get(("head", L), 0.0)
     t_neg = dur.get(("neg_gen", -1), 0.0)
+    t_local = {k: dur.get(("local_head", k), 0.0) for k in layers}
     # fair sequential baseline: same median task costs, one node
     seq_total = S * (sum(t_train.values()) + (t_head if has_head else 0.0)
-                     + (t_neg if has_neg else 0.0))
+                     + (t_neg if has_neg else 0.0)
+                     + (sum(t_local.values()) if has_local else 0.0))
 
     def owner(task: pff_dag.Task) -> int:
         if task.kind == "head":
@@ -292,6 +291,7 @@ def simulate_schedule(records: List[TaskRecord], schedule: str,
         if task.kind == "neg_gen":
             return pff_dag.neg_node_of(schedule, num_nodes,
                                        chapter=task.chapter)
+        # train / local_head: a local head trains where its layer trains
         return pff_dag.node_of(schedule, num_nodes, layer=task.layer,
                                chapter=task.chapter)
 
@@ -300,6 +300,8 @@ def simulate_schedule(records: List[TaskRecord], schedule: str,
             return t_head
         if task.kind == "neg_gen":
             return t_neg
+        if task.kind == "local_head":
+            return t_local[task.layer]
         extra = 0.0
         if schedule == "single_layer" and task.layer > 0:
             # re-forward layers < k over the train set (Algorithm 1)
@@ -313,11 +315,13 @@ def simulate_schedule(records: List[TaskRecord], schedule: str,
     done: Dict[pff_dag.Task, float] = {}
 
     for task in pff_dag.build_tasks(L, S, has_head=has_head,
-                                    has_neg=has_neg):
+                                    has_neg=has_neg,
+                                    has_local_heads=has_local):
         n = owner(task)
         start = node_free[n]
         for dep in pff_dag.deps(task, L, has_head=has_head,
-                                has_neg=has_neg):
+                                has_neg=has_neg,
+                                has_local_heads=has_local):
             start = max(start, done[dep] +
                         (comm_time if owner(dep) != n else 0.0))
         t = cost(task)
@@ -337,10 +341,50 @@ def simulate_schedule(records: List[TaskRecord], schedule: str,
 # Federated PFF (actually trains on node-local shards)
 # ---------------------------------------------------------------------------
 
-def train_federated(cfg, task: data_lib.ImageTask, num_nodes: int,
-                    **kw) -> TrainResult:
+def federated_shards(cfg, task: data_lib.ImageTask, num_nodes: int):
+    """The canonical federated shard split: a seed-deterministic
+    permutation dealt round-robin, so every node (and the executor)
+    reconstructs the same shards without communication."""
     rng = np.random.default_rng(cfg.seed)
     order = rng.permutation(len(task.x_train))
-    shards = [order[i::num_nodes] for i in range(num_nodes)]
-    return train_ff_mlp(cfg, task, node_data=shards, num_nodes=num_nodes,
-                        **kw)
+    return [order[i::num_nodes] for i in range(num_nodes)]
+
+
+def run_federated_schedule(cfg, task: data_lib.ImageTask, num_nodes: int,
+                           **kw) -> TrainResult:
+    """Federated PFF's weight stream (the facade's ``federated`` backend)."""
+    return run_chapter_schedule(cfg, task,
+                                node_data=federated_shards(cfg, task,
+                                                           num_nodes),
+                                num_nodes=num_nodes, **kw)
+
+
+# ---------------------------------------------------------------------------
+# Deprecated entry points — the supported surface is ``repro.api.fit``
+# ---------------------------------------------------------------------------
+
+def train_ff_mlp(cfg, task: data_lib.ImageTask, *, probe_every=0,
+                 node_data: Optional[List[np.ndarray]] = None,
+                 num_nodes: int = 1, verbose=False) -> TrainResult:
+    """Deprecated: use ``repro.api.fit(cfg, task, backend="sequential")``."""
+    warnings.warn("pff.train_ff_mlp is deprecated; use repro.api.fit("
+                  "cfg, task, backend=\"sequential\")",
+                  DeprecationWarning, stacklevel=2)
+    from repro import api
+    if node_data is not None:       # pre-facade federated spelling
+        return run_chapter_schedule(cfg, task, probe_every=probe_every,
+                                    node_data=node_data,
+                                    num_nodes=num_nodes, verbose=verbose)
+    return api.fit(cfg, task, backend="sequential", probe_every=probe_every,
+                   verbose=verbose).raw
+
+
+def train_federated(cfg, task: data_lib.ImageTask, num_nodes: int,
+                    **kw) -> TrainResult:
+    """Deprecated: use ``repro.api.fit(cfg, task, backend="federated")``."""
+    warnings.warn("pff.train_federated is deprecated; use repro.api.fit("
+                  "cfg, task, backend=\"federated\", num_nodes=N)",
+                  DeprecationWarning, stacklevel=2)
+    from repro import api
+    return api.fit(cfg, task, backend="federated", num_nodes=num_nodes,
+                   **kw).raw

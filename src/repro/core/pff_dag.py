@@ -44,7 +44,7 @@ SCHEDULES = ("sequential", "single_layer", "all_layers", "federated")
 
 @dataclasses.dataclass(frozen=True)
 class Task:
-    kind: str                  # train | head | neg_gen
+    kind: str                  # train | head | neg_gen | local_head
     layer: int                 # -1 for non-layer tasks
     chapter: int
 
@@ -81,14 +81,24 @@ def neg_node_of(schedule: str, num_nodes: int, *, chapter: int) -> int:
 
 
 def build_tasks(n_layers: int, splits: int, *, has_head: bool = False,
-                has_neg: bool = False) -> List[Task]:
+                has_neg: bool = False,
+                has_local_heads: bool = False) -> List[Task]:
     """All tasks in canonical (sequential-trainer) order — a valid
     topological order of ``deps``, which is what both the simulator's
-    event loop and the executor's dispatch loop walk."""
+    event loop and the executor's dispatch loop walk.
+
+    has_local_heads: the Performance-Optimized goodness path (paper
+    §4.4) — each layer's local softmax head is a per-layer dependent of
+    that layer's train task, owned by the same node. The executor fuses
+    each local_head into its train task (they share one two-layer-deep
+    backprop call — that is the §4.4 objective), which preserves this
+    order exactly."""
     tasks: List[Task] = []
     for c in range(splits):
         for k in range(n_layers):
             tasks.append(Task("train", k, c))
+            if has_local_heads:
+                tasks.append(Task("local_head", k, c))
         if has_head:
             tasks.append(Task("head", n_layers, c))
         if has_neg:
@@ -97,7 +107,8 @@ def build_tasks(n_layers: int, splits: int, *, has_head: bool = False,
 
 
 def deps(task: Task, n_layers: int, *, has_head: bool = False,
-         has_neg: bool = False, strict_neg: bool = False) -> List[Task]:
+         has_neg: bool = False, strict_neg: bool = False,
+         has_local_heads: bool = False) -> List[Task]:
     """Direct dependencies of ``task`` (see module docstring)."""
     k, c = task.layer, task.chapter
     out: List[Task] = []
@@ -106,8 +117,17 @@ def deps(task: Task, n_layers: int, *, has_head: bool = False,
             out.append(Task("train", k - 1, c))
         if c > 0:
             out.append(Task("train", k, c - 1))
+            if has_local_heads:
+                # §4.4: the chapter-c train task backprops THROUGH the
+                # layer's local head, so it consumes the head weights
+                # produced by chapter-(c-1)'s local_head task
+                out.append(Task("local_head", k, c - 1))
         if k == 0 and c > 0 and has_neg and strict_neg:
             out.append(Task("neg_gen", -1, c - 1))
+    elif task.kind == "local_head":
+        out.append(Task("train", k, c))
+        if c > 0:
+            out.append(Task("local_head", k, c - 1))
     elif task.kind == "head":
         out.append(Task("train", n_layers - 1, c))
         if c > 0:

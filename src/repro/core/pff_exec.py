@@ -39,8 +39,15 @@ regenerates its own locally — parallel, and still bit-exact.
 ``benchmarks/pff_exec.py`` records this executor's measured makespan
 next to the simulator's prediction (``BENCH_pff_exec.json``).
 
-Not covered (stays on the sequential trainer): the Performance-Optimized
-goodness path (``cfg.goodness_fn == "perf_opt"``).
+All strategy variation (negatives / goodness / classifier) comes from
+the ``repro.core.strategies`` registries — the same objects the
+sequential trainer consumes — including the Performance-Optimized
+goodness path (paper §4.4): its per-layer local-head task is a
+per-layer dependent of the train task in the DAG
+(``pff_dag.build_tasks(has_local_heads=True)``), owned by the same
+node, and the executor dispatches it FUSED with its train task (the
+§4.4 objective is one two-layer-deep backprop call), which preserves
+the DAG order and the bit-exactness oracle.
 """
 from __future__ import annotations
 
@@ -53,7 +60,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import data as data_lib, optim
-from repro.core import ff, ff_mlp, pff, pff_dag
+from repro.core import ff, ff_mlp, pff, pff_dag, strategies
 from repro.launch import mesh as mesh_lib
 
 
@@ -66,13 +73,6 @@ class ExecResult:
     test_acc: float
     records: Optional[List[pff.TaskRecord]]  # per-task durations (profile)
     node_busy: Optional[List[float]]         # per-node busy seconds (profile)
-
-
-def _fwd(lp, x):
-    """One layer forward + Hinton length-norm — the inter-layer hand-off.
-    Mirrors the sequential trainer's eager call sequence exactly (bit-
-    exactness depends on it)."""
-    return ff_mlp._norm(ff_mlp.layer_apply(lp, x))
 
 
 class PFFExecutor:
@@ -88,10 +88,6 @@ class PFFExecutor:
         if schedule not in pff_dag.SCHEDULES:
             raise ValueError(f"unknown schedule {schedule!r}; expected "
                              f"one of {pff_dag.SCHEDULES}")
-        if getattr(cfg, "goodness_fn", "sumsq") == "perf_opt":
-            raise NotImplementedError(
-                "the real executor covers the paper's FF path; "
-                "Performance-Optimized goodness stays on pff.train_ff_mlp")
         if schedule == "sequential" and num_nodes != 1:
             raise ValueError("sequential means num_nodes=1")
         self.cfg = cfg
@@ -102,9 +98,12 @@ class PFFExecutor:
                         else mesh_lib.pff_node_devices(num_nodes))
         self.n_layers = len(cfg.layer_sizes) - 1
         self.C = max(cfg.epochs // cfg.splits, 1)
-        self.impl = getattr(cfg, "kernel_impl", "auto")
-        self.has_head = cfg.classifier == "softmax"
-        self.has_neg = cfg.neg_mode in ("adaptive", "random")
+        self.impl = ff_mlp.kernel_impl(cfg)
+        self.good = strategies.goodness.get(cfg.goodness_fn)
+        self.neg = strategies.negatives.get(cfg.neg_mode)
+        self.cls = strategies.classifier.get(cfg.classifier)
+        self.has_head = self.cls.trains_head
+        self.has_neg = self.good.uses_negatives and self.neg.regenerates
         self._setup_constants()
 
     # ---- per-device constants (replicated once, before any timing) -------
@@ -115,24 +114,26 @@ class PFFExecutor:
         self.kneg = jax.random.fold_in(key, 999)
         shards = None
         if self.schedule == "federated":
-            # same shard construction as pff.train_federated: chapter c
-            # uses shard c % N — which IS node c % N's own shard, so
-            # training data never crosses a node boundary.
-            rng = np.random.default_rng(cfg.seed)
-            order = rng.permutation(len(task.x_train))
-            shards = [order[i::self.num_nodes]
-                      for i in range(self.num_nodes)]
+            # same shard construction as the sequential federated
+            # trainer: chapter c uses shard c % N — which IS node
+            # c % N's own shard, so training data never crosses a node
+            # boundary.
+            shards = pff.federated_shards(cfg, task, self.num_nodes)
         self._const: Dict[int, dict] = {}
         for node, dev in enumerate(self.devices):
             x_d = jax.device_put(task.x_train, dev)
             y_d = jax.device_put(task.y_train, dev)
             c = {"x": x_d, "y": y_d,
-                 "xp0": ff_mlp._norm(ff.overlay_label(
-                     x_d, y_d, cfg.num_classes)),
-                 "xn0_init": ff_mlp._norm(pff._make_negatives(
-                     self.kneg, cfg, None, x_d, y_d, "random")),
                  "idx": (jax.device_put(shards[node], dev)
                          if shards is not None else None)}
+            if self.good.uses_negatives:
+                c["xp0"] = ff_mlp._norm(ff.overlay_label(
+                    x_d, y_d, cfg.num_classes))
+                c["xn0_init"] = ff_mlp._norm(self.neg.fn(
+                    self.kneg, cfg, None, x_d, y_d, None))
+            else:
+                c["xk0"] = ff_mlp._norm(ff.overlay_neutral(
+                    x_d, cfg.num_classes))
             if self.has_head:
                 c["x_neutral"] = ff.overlay_neutral(x_d, cfg.num_classes)
             self._const[node] = c
@@ -152,23 +153,42 @@ class PFFExecutor:
         """Async hand-off of a param/opt pytree onto ``node``'s device."""
         return jax.device_put(tree, self.devices[node])
 
+    def _fwd(self, lp, x):
+        """One layer forward + Hinton length-norm — the inter-layer
+        hand-off. ``ff_mlp.fwd_norm`` is the exact call the sequential
+        trainer makes (bit-exactness depends on it)."""
+        return ff_mlp.fwd_norm(lp, x, impl=self.impl)
+
     def _xn0_for(self, chapter, node):
         """The (full-size, normalized) negatives the sequential trainer
         would use for this chapter, resident on ``node``."""
         const = self._const[node]
         if not self.has_neg or chapter == 0:
             return const["xn0_init"]
-        if self.cfg.neg_mode == "random":
+        if not self.neg.needs_scores:
             # key-only — each node regenerates its own copy locally
             # (the paper's parallel per-node UpdateXNEG), bit-identical
             # to the sequential trainer's stream by PRNG determinism.
-            return ff_mlp._norm(pff._make_negatives(
+            return ff_mlp._norm(self.neg.fn(
                 jax.random.fold_in(self.kneg, chapter - 1), self.cfg,
-                None, const["x"], const["y"], "random"))
-        # adaptive: published by chapter-(c-1)'s neg_gen task
+                None, const["x"], const["y"], None))
+        # score-needing (AdaptiveNEG): published by chapter-(c-1)'s
+        # neg_gen task
         src_chapter, xn0 = self._neg
         assert src_chapter == chapter - 1, (src_chapter, chapter)
         return self._pull(xn0, node)
+
+    def _chapter_inputs(self, chapter, node):
+        """(acts, extras) exactly as the sequential trainer builds them:
+        activations flow layer-to-layer, extras (labels) do not."""
+        const = self._const[node]
+        idx = const["idx"]
+        if self.good.uses_negatives:
+            xn0 = self._xn0_for(chapter, node)
+            return ((const["xp0"] if idx is None else const["xp0"][idx],
+                     xn0 if idx is None else xn0[idx]), ())
+        return ((const["xk0"] if idx is None else const["xk0"][idx],),
+                (const["y"] if idx is None else const["y"][idx],))
 
     def _maybe_record(self, profile, node, kind, layer, chapter, t0, out):
         if not profile:
@@ -179,16 +199,20 @@ class PFFExecutor:
         self._busy[node] += dt
 
     # ---- per-task bodies (each mirrors the sequential trainer) -----------
-    def _train_task(self, k, chapter, node, xp, xn, lrs, kc, profile):
+    def _train_task(self, k, chapter, node, acts, extras, lrs, kc, profile):
+        """One chapter-train task via the goodness strategy. For
+        Performance-Optimized goodness this call carries the layer's
+        local_head task fused in (see module docstring); it records as
+        ONE train task — exactly like the sequential trainer's timing."""
         t0 = time.perf_counter()
-        lp, op = self._pull(self._layers[k], node)
-        lp, op = ff_mlp.train_layer_chapter(
-            lp, op, xp, xn, lrs, jax.random.fold_in(kc, k),
-            batch=self.cfg.batch_size, epochs=self.C,
-            theta=self.cfg.theta, peer_w=self.cfg.peer_w, impl=self.impl)
-        self._layers[k] = (lp, op)
-        self._maybe_record(profile, node, "train", k, chapter, t0, lp)
-        return lp
+        state = self._pull(self._states[k], node)
+        state = self.good.train_chapter(
+            state, acts, extras, lrs, jax.random.fold_in(kc, k),
+            cfg=self.cfg, epochs=self.C)
+        self._states[k] = state
+        self._maybe_record(profile, node, "train", k, chapter, t0,
+                           state[0])
+        return state[0]
 
     def _head_task(self, chapter, node, idx, lrs_head, kc, profile):
         const = self._const[node]
@@ -198,7 +222,8 @@ class PFFExecutor:
         # pull every layer onto the head node (no-op when already there,
         # e.g. all_layers; real hand-off for single_layer)
         feats = ff_mlp.softmax_feats(
-            [self._pull(lp, node) for lp, _ in self._layers], xn_all)
+            [self._pull(s[0], node) for s in self._states], xn_all,
+            impl=self.impl)
         head, op = self._pull(self._head, node)
         head, op = ff_mlp.train_head_chapter(
             head, op, feats, const["y"] if idx is None else const["y"][idx],
@@ -209,17 +234,18 @@ class PFFExecutor:
                            t0, head["w"])
 
     def _neg_task(self, chapter, node, profile):
-        """AdaptiveNEG regeneration from the full chapter-c model,
-        published for the next chapter ("UpdateXNEG(publish=True)" — the
-        DAG's strict_neg gating, matching the sequential trainer)."""
+        """Score-needing (AdaptiveNEG) regeneration from the full
+        chapter-c model, published for the next chapter
+        ("UpdateXNEG(publish=True)" — the DAG's strict_neg gating,
+        matching the sequential trainer)."""
         const = self._const[node]
         t0 = time.perf_counter()
-        params = {"layers": [self._pull(lp, node)
-                             for lp, _ in self._layers]}
+        params = {"layers": [self._pull(s[0], node)
+                             for s in self._states]}
         scores = pff._class_scores_chunked(params, const["x"], self.cfg)
-        xn0 = ff_mlp._norm(pff._make_negatives(
+        xn0 = ff_mlp._norm(self.neg.fn(
             jax.random.fold_in(self.kneg, chapter), self.cfg, params,
-            const["x"], const["y"], "adaptive", scores))
+            const["x"], const["y"], scores))
         self._neg = (chapter, xn0)
         self._maybe_record(profile, node, "neg_gen", -1, chapter, t0, xn0)
 
@@ -229,22 +255,18 @@ class PFFExecutor:
         chapter, computing its own forward features as it trains."""
         node = pff_dag.node_of(self.schedule, self.num_nodes, layer=0,
                                chapter=chapter)
-        const = self._const[node]
-        idx = const["idx"]
+        idx = self._const[node]["idx"]
         lrs, lrs_head = self._lrs(chapter)
         kc = jax.random.fold_in(self.key, chapter)
-        xn0 = self._xn0_for(chapter, node)
-        xp = const["xp0"] if idx is None else const["xp0"][idx]
-        xn = xn0 if idx is None else xn0[idx]
+        acts, extras = self._chapter_inputs(chapter, node)
         for k in range(self.n_layers):
-            lp = self._train_task(k, chapter, node, xp, xn, lrs, kc,
-                                  profile)
+            lp = self._train_task(k, chapter, node, acts, extras, lrs,
+                                  kc, profile)
             if k + 1 < self.n_layers:
-                xp = _fwd(lp, xp)
-                xn = _fwd(lp, xn)
+                acts = tuple(self._fwd(lp, a) for a in acts)
         if self.has_head:
             self._head_task(chapter, node, idx, lrs_head, kc, profile)
-        if self.cfg.neg_mode == "adaptive":
+        if self.has_neg and self.neg.needs_scores:
             self._neg_task(chapter, node, profile)
 
     def _run_chapter_single_layer(self, chapter, profile):
@@ -257,21 +279,18 @@ class PFFExecutor:
         for k in range(self.n_layers):
             node = pff_dag.node_of(self.schedule, self.num_nodes,
                                    layer=k, chapter=chapter)
-            const = self._const[node]
-            t0 = time.perf_counter()
-            xp = const["xp0"]
-            xn = self._xn0_for(chapter, node)
+            acts, extras = self._chapter_inputs(chapter, node)
             for j in range(k):       # Algorithm-1 forward recompute
-                w_j = self._pull(self._layers[j][0], node)
-                xp = _fwd(w_j, xp)
-                xn = _fwd(w_j, xn)
-            self._train_task(k, chapter, node, xp, xn, lrs, kc, profile)
+                w_j = self._pull(self._states[j][0], node)
+                acts = tuple(self._fwd(w_j, a) for a in acts)
+            self._train_task(k, chapter, node, acts, extras, lrs, kc,
+                             profile)
         if self.has_head:
             node = pff_dag.head_node_of(self.schedule, self.num_nodes,
                                         n_layers=self.n_layers,
                                         chapter=chapter)
             self._head_task(chapter, node, None, lrs_head, kc, profile)
-        if self.cfg.neg_mode == "adaptive":
+        if self.has_neg and self.neg.needs_scores:
             # the LAST node holds the full model freshest: it generates
             # and publishes for everyone (the paper's serialization).
             self._neg_task(chapter,
@@ -294,24 +313,24 @@ class PFFExecutor:
         t_start = time.perf_counter()
         # initial placement rides the timed window: it is part of the
         # schedule's real cost (the simulator's t=0 is the same state).
-        self._layers = [(lp, op) for lp, op in
-                        zip(params["layers"], opt["layers"])]
+        self._states = [self.good.get_state(params, opt, k)
+                        for k in range(self.n_layers)]
         self._head = (params["head"], opt["head"])
         for chapter in range(cfg.splits):
             if self.schedule == "single_layer":
                 self._run_chapter_single_layer(chapter, profile)
             else:
                 self._run_chapter_owned(chapter, profile)
-        outs = [lp for lp, _ in self._layers] + [self._head[0]]
+        outs = [s[0] for s in self._states] + [self._head[0]]
         if self._neg[1] is not None:
             outs.append(self._neg[1])
         jax.block_until_ready(outs)
         makespan = time.perf_counter() - t_start
 
-        final = {"layers": [self._pull(lp, 0) for lp, _ in self._layers],
-                 "head": self._pull(self._head[0], 0)}
+        final = self._pull({**self.good.export(self._states),
+                            "head": self._head[0]}, 0)
         acc = ff_mlp.accuracy(final, self.task.x_test, self.task.y_test,
-                              cfg.num_classes, cfg.classifier,
+                              cfg.num_classes, self.good.eval_mode(cfg),
                               impl=self.impl)
         return ExecResult(final, self.schedule, self.num_nodes, makespan,
                           acc, self._records if profile else None,
@@ -320,15 +339,24 @@ class PFFExecutor:
 
 def run_pff_exec(cfg, task, schedule, num_nodes, *, devices=None,
                  profile=False) -> ExecResult:
-    """One-shot convenience wrapper around ``PFFExecutor``."""
-    return PFFExecutor(cfg, task, schedule, num_nodes,
-                       devices=devices).run(profile=profile)
+    """Deprecated: use ``repro.api.fit(cfg, task, backend="executor",
+    schedule=..., num_nodes=...)``."""
+    import warnings
+
+    warnings.warn("pff_exec.run_pff_exec is deprecated; use repro.api."
+                  "fit(cfg, task, backend=\"executor\", schedule=..., "
+                  "num_nodes=...)", DeprecationWarning, stacklevel=2)
+    from repro import api
+    return api.fit(cfg, task, backend="executor", schedule=schedule,
+                   num_nodes=num_nodes, devices=devices,
+                   profile=profile).raw
 
 
-def params_bit_equal(a, b, *, with_head=False):
+def params_bit_equal(a, b, *, with_head=False, with_local_heads=False):
     """True iff two FF-MLP params pytrees carry BIT-IDENTICAL layer
-    (and optionally head) weights — the executor's correctness oracle,
-    shared by the selftest, the benchmark gate, and the example."""
+    (and optionally head / §4.4 local-head) weights — the executor's
+    correctness oracle, shared by the selftest, the benchmark gate, and
+    the example."""
     def leaves_equal(pa, pb):
         return all(bool(jnp.array_equal(pa[name], pb[name]))
                    for name in ("w", "b"))
@@ -338,6 +366,10 @@ def params_bit_equal(a, b, *, with_head=False):
              for pa, pb in zip(a["layers"], b["layers"]))
     if with_head:
         ok = ok and leaves_equal(a["head"], b["head"])
+    if with_local_heads:
+        ok = (ok and len(a["local_heads"]) == len(b["local_heads"])
+              and all(leaves_equal(pa, pb) for pa, pb in
+                      zip(a["local_heads"], b["local_heads"])))
     return ok
 
 
@@ -349,30 +381,40 @@ def params_bit_equal(a, b, *, with_head=False):
 # ---------------------------------------------------------------------------
 
 def _check_case(schedule, nodes, splits, n_train, neg_mode, classifier,
-                *, check_sim_bound=False):
-    """Trains one config both ways and returns a list of failure
-    strings (empty = the executor reproduced the sequential trainer's
-    weight stream bit-exactly)."""
+                goodness_fn="sumsq", *, check_sim_bound=False):
+    """Trains one config both ways — THROUGH THE FACADE (``api.fit``) —
+    and returns a list of failure strings (empty = the executor
+    reproduced the sequential trainer's weight stream bit-exactly)."""
+    from repro import api
     from repro.configs.ff_mlp import FFMLPConfig
 
     task = data_lib.mnist_like(n_train=n_train, n_test=200)
     cfg = FFMLPConfig(layer_sizes=(784, 128, 128), epochs=splits * 2,
                       splits=splits, neg_mode=neg_mode,
-                      classifier=classifier, batch_size=64, seed=0)
+                      classifier=classifier, goodness_fn=goodness_fn,
+                      batch_size=64, seed=0)
     if schedule == "federated":
-        ref = pff.train_federated(cfg, task, nodes)
+        ref = api.fit(cfg, task, backend="federated", num_nodes=nodes)
     else:
-        ref = pff.train_ff_mlp(cfg, task)
-    res = run_pff_exec(cfg, task, schedule, nodes)
+        ref = api.fit(cfg, task, backend="sequential")
+    res = api.fit(cfg, task, backend="executor", schedule=schedule,
+                  num_nodes=nodes)
 
     failures = []
+    perf_opt = goodness_fn == "perf_opt"
     if not params_bit_equal(ref.params, res.params,
-                            with_head=classifier == "softmax"):
+                            with_head=classifier == "softmax",
+                            with_local_heads=perf_opt):
         # diagnose which leaves diverged and by how much
         named = [(f"layer {k}", lp_ref, lp_ex) for k, (lp_ref, lp_ex) in
                  enumerate(zip(ref.params["layers"], res.params["layers"]))]
         if classifier == "softmax":
             named.append(("head", ref.params["head"], res.params["head"]))
+        if perf_opt:
+            named += [(f"local_head {k}", h_ref, h_ex)
+                      for k, (h_ref, h_ex) in
+                      enumerate(zip(ref.params["local_heads"],
+                                    res.params["local_heads"]))]
         for label, pa, pb in named:
             for name in ("w", "b"):
                 if not bool(jnp.array_equal(pa[name], pb[name])):
@@ -392,21 +434,26 @@ def _check_case(schedule, nodes, splits, n_train, neg_mode, classifier,
                 f"implausibly beats the simulator's perfect-overlap "
                 f"prediction {sim.makespan:.3f}s by more than 4x")
     print(f"devices={len(jax.devices())} schedule={schedule} "
-          f"nodes={nodes} neg={neg_mode} cls={classifier}: "
+          f"nodes={nodes} neg={neg_mode} cls={classifier} "
+          f"goodness={goodness_fn}: "
           f"exec acc={res.test_acc:.4f} seq acc={ref.test_acc:.4f} "
           f"makespan={res.makespan:.2f}s{sim_note} -> "
           + ("FAIL" if failures else "bit-exact"))
     return failures
 
 
-# (schedule, nodes, splits, n_train, neg_mode, classifier)
+# (schedule, nodes, splits, n_train, neg_mode, classifier[, goodness_fn])
 # n_train=520: 520 % 64 != 0 — the tail-batch path is always exercised;
 # federated shards of 130 hit a different (also non-divisible) tail.
+# The perf_opt rows check the §4.4 path (fused per-layer local-head
+# task) end to end, including the single_layer forward recompute.
 _MATRIX = (
     ("all_layers", 4, 4, 520, "random", "goodness"),
     ("all_layers", 4, 3, 520, "adaptive", "softmax"),
     ("federated", 4, 4, 520, "random", "goodness"),
     ("single_layer", 2, 3, 520, "random", "goodness"),
+    ("all_layers", 4, 3, 520, "random", "goodness", "perf_opt"),
+    ("single_layer", 2, 3, 520, "random", "goodness", "perf_opt"),
 )
 
 
@@ -426,9 +473,11 @@ def _selftest(argv=None):
                    help="deliberately NOT divisible by the batch size, "
                         "so the tail-batch path is exercised too")
     p.add_argument("--neg-mode", default="random",
-                   choices=["random", "adaptive", "fixed"])
+                   choices=list(strategies.negatives.names()))
     p.add_argument("--classifier", default="goodness",
-                   choices=["goodness", "softmax"])
+                   choices=list(strategies.classifier.names()))
+    p.add_argument("--goodness-fn", default="sumsq",
+                   choices=list(strategies.goodness.names()))
     args = p.parse_args(argv)
 
     failures = []
@@ -438,7 +487,8 @@ def _selftest(argv=None):
     else:
         failures = _check_case(args.schedule, args.nodes, args.splits,
                                args.n_train, args.neg_mode,
-                               args.classifier, check_sim_bound=True)
+                               args.classifier, args.goodness_fn,
+                               check_sim_bound=True)
     if failures:
         print("SELFTEST FAILED:\n  " + "\n  ".join(failures))
         return 1

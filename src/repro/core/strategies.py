@@ -1,0 +1,208 @@
+"""Strategy registries for the FF-MLP training facade (``repro.api``).
+
+The paper's variation axes — HOW negatives are generated (AdaptiveNEG /
+FixedNEG / RandomNEG), WHAT per-layer objective is trained (sum-of-squares
+goodness vs the Performance-Optimized local-head loss, §4.4) and WHICH
+classifier produces label scores (accumulated goodness vs the softmax
+head) — used to be string-``if`` chains spread across ``ff_mlp.py``,
+``pff.py`` and ``pff_exec.py``. They are now three small registries of
+looked-up callables sharing one signature each, so the sequential
+trainer, the simulator and the real executor all consume the same
+strategy objects, and new strategies plug in without touching the
+drivers:
+
+    from repro import api
+    api.register_negatives("my_neg", my_fn)
+    cfg = FFMLPConfig(neg_mode="my_neg", ...)
+    api.fit(cfg, task)
+
+This module sits BELOW ``ff_mlp``/``pff``/``pff_exec`` in the import
+graph: it defines the registry machinery and the negative-sample
+builtins (which only need ``repro.core.ff``); the goodness and
+classifier builtins close over ``ff_mlp``'s jitted trainers and are
+registered at the bottom of ``ff_mlp.py``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+from repro.core import ff
+
+
+class Registry:
+    """A tiny name -> strategy map with helpful lookup errors."""
+
+    def __init__(self, kind: str):
+        self.kind = kind
+        self._entries = {}
+
+    def register(self, name: str, entry, *, overwrite: bool = False):
+        if not overwrite and name in self._entries:
+            raise ValueError(
+                f"{self.kind} strategy {name!r} already registered "
+                "(pass overwrite=True to replace)")
+        self._entries[name] = entry
+        return entry
+
+    def unregister(self, name: str):
+        """Remove a strategy (no-op if absent) — mainly for tests and
+        interactive experimentation."""
+        self._entries.pop(name, None)
+
+    def get(self, name: str):
+        try:
+            return self._entries[name]
+        except KeyError:
+            raise KeyError(
+                f"unknown {self.kind} strategy {name!r}; registered: "
+                f"{', '.join(self.names())}") from None
+
+    def names(self):
+        return tuple(sorted(self._entries))
+
+    def __contains__(self, name):
+        return name in self._entries
+
+    def __iter__(self):
+        return iter(self.names())
+
+
+# ---------------------------------------------------------------------------
+# Negatives: fn(key, cfg, params, x, y, scores) -> (N, D) overlaid images
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class NegativesStrategy:
+    """How negative samples are (re)generated.
+
+    fn(key, cfg, params, x, y, scores) -> (N, D) label-overlaid images
+    (the raw, un-normalized overlay; callers apply the inter-layer
+    length normalization). ``params`` and ``scores`` (the (N, C)
+    per-class score matrix) are the live model ONLY when
+    ``needs_scores`` (``params`` is guaranteed to carry the trained
+    ``"layers"`` stack; auxiliary groups like the softmax head may be
+    absent on the executor); both are None on the very first chapter (before
+    any model exists — strategies must degrade gracefully then) and in
+    key-only per-node regeneration. A strategy whose ``fn`` reads
+    ``params`` or ``scores`` MUST set ``needs_scores=True`` — this is
+    what lets the executor regenerate key-only negatives locally per
+    node without shipping the model.
+
+    regenerates: whether a per-chapter ``neg_gen`` task exists at all
+    (FixedNEG generates once and never refreshes).
+    needs_scores: whether regeneration needs the full current model's
+    class scores. This drives the executor's publish semantics: a
+    score-needing strategy is generated ONCE and published along the
+    chapter DAG (the paper's Single-Layer serialization), while a
+    key-only strategy is regenerated locally per node, bit-identically,
+    by PRNG determinism.
+    """
+    name: str
+    fn: Callable
+    regenerates: bool = True
+    needs_scores: bool = False
+
+
+@dataclasses.dataclass(frozen=True)
+class GoodnessStrategy:
+    """What each layer trains during its chapter task.
+
+    All callables share one signature built around an opaque per-layer
+    ``state`` tuple whose first element is always the layer's param dict
+    (so drivers can hand activations/weights along the DAG without
+    knowing the strategy):
+
+      get_state(params, opt, k)          -> state
+      set_state(params, opt, k, state)   (writes state back)
+      train_chapter(state, acts, extras, lrs, key, *, cfg, epochs)
+                                         -> state
+      export(states)                     -> partial params dict
+
+    ``acts`` are the activation tensors that flow layer-to-layer (each
+    advanced with ``ff_mlp.fwd_norm``); ``extras`` are per-chapter
+    constants (e.g. labels) that do not.
+
+    uses_negatives: False means the strategy trains on labeled data only
+    (no pos/neg pair, no ``neg_gen`` tasks — the paper's §4.4 path).
+    eval_mode(cfg): the classifier-registry entry used for final
+    evaluation. init_extras(key, cfg), when set, returns extra parameter
+    groups the strategy trains besides the layers (e.g. the §4.4 local
+    heads) — merged into the params dict by ``ff_mlp.init``.
+    """
+    name: str
+    uses_negatives: bool
+    get_state: Callable
+    set_state: Callable
+    train_chapter: Callable
+    export: Callable
+    eval_mode: Callable
+    init_extras: Optional[Callable] = None
+
+
+@dataclasses.dataclass(frozen=True)
+class ClassifierStrategy:
+    """How (B, C) label scores are produced at prediction time.
+
+    scores(params, x, *, num_classes, impl) -> (B, C); higher = more
+    predicted. ``trains_head`` marks strategies that require the
+    dedicated softmax-head chapter task during training.
+    ``requires_goodness`` (optional) names the goodness strategy whose
+    parameters this classifier reads (e.g. the Performance-Optimized
+    local heads) — ``api.fit`` validates the pairing.
+    """
+    name: str
+    scores: Callable
+    trains_head: bool = False
+    requires_goodness: Optional[str] = None
+
+
+negatives = Registry("negatives")
+goodness = Registry("goodness")
+classifier = Registry("classifier")
+
+
+def register_negatives(name, fn, *, regenerates=True, needs_scores=False,
+                       overwrite=False):
+    """Public hook: plug a new negative-sample strategy into the facade."""
+    return negatives.register(
+        name, NegativesStrategy(name, fn, regenerates, needs_scores),
+        overwrite=overwrite)
+
+
+def register_goodness(name, strategy, *, overwrite=False):
+    return goodness.register(name, strategy, overwrite=overwrite)
+
+
+def register_classifier(name, scores, *, trains_head=False,
+                        requires_goodness=None, overwrite=False):
+    return classifier.register(
+        name, ClassifierStrategy(name, scores, trains_head,
+                                 requires_goodness),
+        overwrite=overwrite)
+
+
+# ---------------------------------------------------------------------------
+# Builtin negative-sample strategies (paper §4.2)
+# ---------------------------------------------------------------------------
+
+def _random_negatives(key, cfg, params, x, y, scores):
+    """RandomNEG: uniform over the C-1 wrong labels, fresh each chapter."""
+    labels = ff.random_wrong_labels(key, y, cfg.num_classes)
+    return ff.overlay_label(x, labels, cfg.num_classes)
+
+
+def _adaptive_negatives(key, cfg, params, x, y, scores):
+    """AdaptiveNEG: confusable wrong labels from the model's own class
+    scores; falls back to RandomNEG before a model exists (chapter 0),
+    which keeps the initial negatives bit-identical across strategies."""
+    if scores is None:
+        return _random_negatives(key, cfg, params, x, y, scores)
+    labels = ff.adaptive_wrong_labels(scores, y, key=key)
+    return ff.overlay_label(x, labels, cfg.num_classes)
+
+
+register_negatives("random", _random_negatives)
+register_negatives("adaptive", _adaptive_negatives, needs_scores=True)
+# FixedNEG = RandomNEG sampled once, never refreshed
+register_negatives("fixed", _random_negatives, regenerates=False)

@@ -21,6 +21,11 @@ def _on_tpu():
     return jax.default_backend() == "tpu"
 
 
+# the valid ``impl`` values for ff_dense — CLI --kernel-impl choices
+# come from here so help text tracks the dispatcher
+FF_DENSE_IMPLS = ("auto", "pallas", "ref")
+
+
 def ff_dense(x, w, b, *, impl="auto", force_pallas=False):
     """Fused (or reference) y = relu(x @ w + b), g = sum(y^2, -1).
 
@@ -36,8 +41,8 @@ def ff_dense(x, w, b, *, impl="auto", force_pallas=False):
     if impl == "pallas":
         return _ff_dense_vjp(x, w, b, not _on_tpu())
     if impl != "ref":
-        raise ValueError(f"unknown ff_dense impl {impl!r}; "
-                         "expected auto | pallas | ref")
+        raise ValueError(f"unknown ff_dense impl {impl!r}; expected one "
+                         f"of {' | '.join(FF_DENSE_IMPLS)}")
     return ref.ff_dense_ref(x, w, b)
 
 

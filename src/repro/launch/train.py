@@ -23,10 +23,11 @@ import time
 import jax
 import jax.numpy as jnp
 
-from repro import checkpoint, data as data_lib, optim
+from repro import api, checkpoint, data as data_lib, optim
 from repro.configs import get_config
 from repro.configs.ff_mlp import FFMLPConfig
-from repro.core import pff, train as train_lib
+from repro.core import pff_dag, train as train_lib
+from repro.kernels import ops
 from repro.models import transformer
 
 
@@ -36,24 +37,33 @@ def run_paper_mlp(args):
     sizes = (task.dim,) + tuple(args.hidden for _ in range(args.layers))
     cfg = FFMLPConfig(
         layer_sizes=sizes, epochs=args.epochs, splits=args.splits,
-        neg_mode=args.neg_mode, classifier=args.classifier,
+        neg_mode=args.neg_mode or FFMLPConfig.neg_mode,
+        classifier=args.classifier,
         goodness_fn=args.goodness_fn, batch_size=args.batch,
-        seed=args.seed)
+        kernel_impl=args.kernel_impl, seed=args.seed)
+    backend = args.backend
+    if backend == "sequential" and args.schedule == "federated":
+        backend = "federated"          # pre-facade CLI spelling
     t0 = time.time()
-    if args.schedule == "federated":
-        res = pff.train_federated(cfg, task, args.nodes,
-                                  probe_every=args.probe, verbose=True)
-    else:
-        res = pff.train_ff_mlp(cfg, task, probe_every=args.probe,
-                               verbose=True)
+    res = api.fit(cfg, task, backend=backend, schedule=args.schedule,
+                  num_nodes=args.nodes, probe_every=args.probe,
+                  verbose=True)
     wall = time.time() - t0
-    print(f"\ntest acc {res.test_acc:.4f}  train acc {res.train_acc:.4f}"
-          f"  wall {wall:.1f}s")
-    for sched, n in (("sequential", 1), ("single_layer", args.nodes),
-                     ("all_layers", args.nodes)):
-        sim = pff.simulate_schedule(res.records, sched, n)
-        print(f"  {sched:13s} N={n}: time={sim.makespan:8.1f}s "
-              f"speedup={sim.speedup:5.2f}x util={sim.utilization:.2f}")
+    acc = f"test acc {res.test_acc:.4f}" if res.test_acc is not None else ""
+    print(f"\n[{backend}] {acc}  wall {wall:.1f}s")
+    if res.makespan is not None:
+        speed = (f" speedup={res.speedup:5.2f}x "
+                 f"util={res.utilization:.2f}"
+                 if res.speedup is not None else "")
+        print(f"  {res.schedule} N={res.num_nodes}: "
+              f"makespan={res.makespan:8.2f}s{speed}")
+    if res.records:
+        for sched, n in (("sequential", 1), ("single_layer", args.nodes),
+                         ("all_layers", args.nodes)):
+            sim = api.simulate(res, sched, n)
+            print(f"  {sched:13s} N={n}: time={sim.makespan:8.1f}s "
+                  f"speedup={sim.speedup:5.2f}x "
+                  f"util={sim.utilization:.2f}  (simulated)")
     return res
 
 
@@ -103,15 +113,25 @@ def main():
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--baseline", action="store_true",
                     help="backprop baseline instead of FF")
+    # choices sourced from the live registries / dispatch tables, so
+    # --help stays truthful when strategies are (un)registered
+    ap.add_argument("--backend", default="sequential",
+                    choices=list(api.BACKENDS),
+                    help="api.fit backend (--paper-mlp): sequential "
+                         "trainer, event simulator, real multi-device "
+                         "executor, federated shards, or pod pipeline")
     ap.add_argument("--schedule", default="all_layers",
-                    choices=["sequential", "single_layer", "all_layers",
-                             "federated"])
+                    choices=list(pff_dag.SCHEDULES))
     ap.add_argument("--neg-mode", default=None,
-                    choices=[None, "adaptive", "fixed", "random"])
+                    choices=[None] + list(api.negatives.names()))
     ap.add_argument("--classifier", default="goodness",
-                    choices=["goodness", "softmax"])
+                    choices=list(api.classifier.names()))
     ap.add_argument("--goodness-fn", default="sumsq",
-                    choices=["sumsq", "perf_opt"])
+                    choices=list(api.goodness.names()))
+    ap.add_argument("--kernel-impl", default="auto",
+                    choices=list(ops.FF_DENSE_IMPLS),
+                    help="ops.ff_dense path: auto (Pallas on TPU, "
+                         "oracle elsewhere), pallas, or ref")
     ap.add_argument("--nodes", type=int, default=4)
     ap.add_argument("--hidden", type=int, default=500)
     ap.add_argument("--layers", type=int, default=4)

@@ -1,0 +1,176 @@
+"""The ``repro.api`` facade: unified fit() over backends, strategy
+registries (round-trip + custom registration), the CIFAR variant
+end-to-end, and the deprecation shims for the old entry points."""
+import dataclasses
+import warnings
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import api, data as data_lib
+from repro.configs.ff_mlp import FFMLPConfig, PAPER_MLP_CIFAR
+
+
+def _tiny_cfg(**kw):
+    base = dict(layer_sizes=(784, 64), epochs=2, splits=2,
+                neg_mode="random", classifier="goodness",
+                batch_size=64, seed=0)
+    base.update(kw)
+    return FFMLPConfig(**base)
+
+
+@pytest.fixture(scope="module")
+def tiny_task():
+    return data_lib.mnist_like(n_train=256, n_test=128)
+
+
+# ---------------------------------------------------------------------------
+# Strategy registries
+# ---------------------------------------------------------------------------
+
+def test_registry_round_trip_of_builtin_strategy_names():
+    """Every builtin config string resolves to a strategy whose ``name``
+    round-trips, for all three registries."""
+    assert set(api.negatives.names()) >= {"adaptive", "fixed", "random"}
+    assert set(api.goodness.names()) >= {"sumsq", "perf_opt"}
+    assert set(api.classifier.names()) >= {"goodness", "softmax"}
+    for reg in (api.negatives, api.goodness, api.classifier):
+        for name in reg.names():
+            assert reg.get(name).name == name
+            assert name in reg
+
+
+def test_registry_unknown_name_lists_choices():
+    with pytest.raises(KeyError, match="random"):
+        api.negatives.get("does_not_exist")
+
+
+def test_register_custom_negatives_strategy(tiny_task):
+    """A user-registered negatives strategy is reachable by config name
+    through fit()."""
+    from repro.core import ff
+
+    def always_next_label(key, cfg, params, x, y, scores):
+        labels = (y + 1) % cfg.num_classes
+        return ff.overlay_label(x, labels, cfg.num_classes)
+
+    api.register_negatives("next_label", always_next_label)
+    try:
+        assert "next_label" in api.negatives
+        res = api.fit(_tiny_cfg(neg_mode="next_label"), tiny_task)
+        assert 0.0 <= res.test_acc <= 1.0
+        # duplicate registration must be loud unless overwrite=True
+        with pytest.raises(ValueError):
+            api.register_negatives("next_label", always_next_label)
+        api.register_negatives("next_label", always_next_label,
+                               overwrite=True)
+    finally:
+        api.negatives.unregister("next_label")
+    assert "next_label" not in api.negatives
+
+
+# ---------------------------------------------------------------------------
+# fit() validation + backends
+# ---------------------------------------------------------------------------
+
+def test_fit_rejects_unknown_backend_and_strategies(tiny_task):
+    with pytest.raises(ValueError, match="backend"):
+        api.fit(_tiny_cfg(), tiny_task, backend="gpipe")
+    with pytest.raises(KeyError, match="negatives"):
+        api.fit(_tiny_cfg(neg_mode="nope"), tiny_task)
+    # classifier/goodness pairing: perf_opt_* classifiers read the
+    # local heads that only goodness_fn="perf_opt" trains
+    with pytest.raises(ValueError, match="perf_opt"):
+        api.fit(_tiny_cfg(classifier="perf_opt_all",
+                          goodness_fn="sumsq"), tiny_task)
+
+
+def test_fit_simulate_backend_returns_schedule_metrics(tiny_task):
+    res = api.fit(_tiny_cfg(), tiny_task, backend="simulate",
+                  schedule="all_layers", num_nodes=2)
+    assert res.makespan > 0
+    assert 0 < res.utilization <= 1.0 + 1e-9
+    assert res.speedup <= 2 + 1e-6
+    assert res.sim.schedule == "all_layers"
+    # and the helper replays the same records under other schedules
+    sim = api.simulate(res, "single_layer", 2)
+    assert sim.makespan > 0
+
+
+def test_fit_result_carries_records_and_params(tiny_task):
+    res = api.fit(_tiny_cfg(classifier="softmax"), tiny_task)
+    kinds = {r.kind for r in res.records}
+    assert kinds >= {"train", "head", "neg_gen"}
+    assert res.params["head"]["w"].shape[-1] == 10
+    assert res.backend == "sequential" and res.num_nodes == 1
+
+
+# ---------------------------------------------------------------------------
+# CIFAR variant end-to-end (previously untested)
+# ---------------------------------------------------------------------------
+
+def test_cifar_variant_end_to_end_above_chance():
+    """PAPER_MLP_CIFAR (reduced) + data.cifar_like through api.fit. The
+    paper's Table 5 point: on the harder task the Performance-Optimized
+    variant dominates plain goodness — and it must clear chance (0.1)
+    by a wide margin."""
+    task = data_lib.cifar_like(n_train=2560, n_test=400)
+    cfg = dataclasses.replace(
+        PAPER_MLP_CIFAR, layer_sizes=(task.dim, 300, 300),
+        epochs=20, splits=2, goodness_fn="perf_opt", batch_size=64,
+        seed=0)
+    assert cfg.layer_sizes[0] == task.dim == 3072      # 32*32*3
+    res = api.fit(cfg, task)
+    assert res.test_acc > 0.3
+    # registry round-trip of the exact strategy names this run used
+    assert api.negatives.get(cfg.neg_mode).name == cfg.neg_mode
+    assert api.goodness.get(cfg.goodness_fn).name == cfg.goodness_fn
+    assert api.classifier.get(cfg.classifier).name == cfg.classifier
+
+
+# ---------------------------------------------------------------------------
+# Deprecated entry points
+# ---------------------------------------------------------------------------
+
+def test_old_entry_points_warn_and_delegate(tiny_task):
+    """pff.train_ff_mlp / pff.train_federated / pff_exec.run_pff_exec
+    still import, emit DeprecationWarning, and produce the facade's
+    exact weight stream."""
+    from repro.core import pff, pff_exec
+
+    cfg = _tiny_cfg()
+    facade = api.fit(cfg, tiny_task)
+    with pytest.warns(DeprecationWarning):
+        old = pff.train_ff_mlp(cfg, tiny_task)
+    assert pff_exec.params_bit_equal(facade.params, old.params)
+
+    fed_facade = api.fit(cfg, tiny_task, backend="federated", num_nodes=2)
+    with pytest.warns(DeprecationWarning):
+        old_fed = pff.train_federated(cfg, tiny_task, 2)
+    assert pff_exec.params_bit_equal(fed_facade.params, old_fed.params)
+
+    with pytest.warns(DeprecationWarning):
+        old_exec = pff_exec.run_pff_exec(cfg, tiny_task, "sequential", 1)
+    assert pff_exec.params_bit_equal(facade.params, old_exec.params)
+    assert old_exec.makespan > 0
+
+
+# ---------------------------------------------------------------------------
+# Pod backend (beyond-paper pipeline) — minimal single-stage smoke
+# ---------------------------------------------------------------------------
+
+def test_pod_backend_runs_lm_config():
+    from repro.configs import get_config
+
+    cfg = get_config("tinyllama-1.1b").reduced()
+    cfg = dataclasses.replace(cfg, num_layers=2, groups=((("attn",), 2),))
+    res = api.fit(cfg, backend="pod", num_nodes=1, steps=2, batch=4,
+                  seq=32)
+    assert res.backend == "pod" and len(res.history) == 2
+    assert np.isfinite(res.history[-1][1])
+
+
+def test_pod_backend_rejects_mlp_config(tiny_task):
+    with pytest.raises(ValueError, match="pod"):
+        api.fit(_tiny_cfg(), tiny_task, backend="pod")

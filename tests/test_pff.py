@@ -1,10 +1,11 @@
 """PFF schedule tests: training improves accuracy; the simulator respects
-the task DAG; schedule properties match the paper's qualitative claims."""
+the task DAG; schedule properties match the paper's qualitative claims.
+Training runs go through the supported surface (``repro.api.fit``)."""
 import jax
 import numpy as np
 import pytest
 
-from repro import data as data_lib
+from repro import api, data as data_lib
 from repro.configs.ff_mlp import FFMLPConfig
 from repro.core import pff
 
@@ -15,7 +16,7 @@ def tiny_result():
     cfg = FFMLPConfig(layer_sizes=(784, 400, 400), epochs=100, splits=5,
                       neg_mode="random", classifier="goodness",
                       batch_size=64, seed=0)
-    return pff.train_ff_mlp(cfg, task), task
+    return api.fit(cfg, task), task
 
 
 def test_training_beats_chance(tiny_result):
@@ -89,10 +90,27 @@ def test_dag_dependencies_respected():
     assert sim.makespan >= (6 / 3) * 3  # >= per-node busy time
 
 
+def test_simulator_replays_local_head_records():
+    """§4.4 perf_opt: ``local_head`` records ride the shared DAG — each
+    runs on its layer's node (after its train task), lengthens the fair
+    sequential baseline, and does NOT serialize the pipeline."""
+    recs, base = [], []
+    for c in range(8):
+        for k in range(3):
+            recs.append(pff.TaskRecord("train", k, c, 1.0))
+            base.append(recs[-1])
+            recs.append(pff.TaskRecord("local_head", k, c, 0.5))
+    with_lh = pff.simulate_schedule(recs, "all_layers", 3)
+    without = pff.simulate_schedule(base, "all_layers", 3)
+    assert with_lh.makespan > without.makespan
+    # layer-local heads keep the All-Layers pipeline parallel
+    assert with_lh.speedup > 2.0
+
+
 def test_federated_trains_on_shards():
     task = data_lib.mnist_like(n_train=2560, n_test=200)
     cfg = FFMLPConfig(layer_sizes=(784, 300), epochs=60, splits=4,
                       neg_mode="random", classifier="goodness",
                       batch_size=64, seed=0)
-    res = pff.train_federated(cfg, task, num_nodes=2)
+    res = api.fit(cfg, task, backend="federated", num_nodes=2)
     assert res.test_acc > 0.15

@@ -48,30 +48,49 @@ def test_executor_rejects_bad_args():
         pff_exec.PFFExecutor(cfg, task, "gpipe", 1)
     with pytest.raises(ValueError):
         pff_exec.PFFExecutor(cfg, task, "sequential", 2)
-    with pytest.raises(NotImplementedError):
+    # unregistered strategy names fail fast with the registry's error
+    with pytest.raises(KeyError):
         pff_exec.PFFExecutor(
-            cfg.__class__(layer_sizes=(784, 32), goodness_fn="perf_opt"),
+            cfg.__class__(layer_sizes=(784, 32), goodness_fn="nope"),
             task, "all_layers", 1)
 
 
 def test_executor_sequential_single_device_runs():
     """N=1 needs no faked devices — the executor must work in-process
-    and still match the canonical trainer bit-exactly."""
+    (via the facade) and still match the canonical trainer bit-exactly."""
     import jax.numpy as jnp
-    from repro import data as data_lib
+    from repro import api, data as data_lib
     from repro.configs.ff_mlp import FFMLPConfig
-    from repro.core import pff, pff_exec
 
     task = data_lib.mnist_like(n_train=200, n_test=50)
     cfg = FFMLPConfig(layer_sizes=(784, 64), epochs=2, splits=2,
                       neg_mode="random", classifier="goodness",
                       batch_size=64, seed=0)
-    ref = pff.train_ff_mlp(cfg, task)
-    res = pff_exec.run_pff_exec(cfg, task, "sequential", 1)
+    ref = api.fit(cfg, task, backend="sequential")
+    res = api.fit(cfg, task, backend="executor", schedule="sequential",
+                  num_nodes=1)
     for lp_ref, lp_ex in zip(ref.params["layers"], res.params["layers"]):
         assert bool(jnp.array_equal(lp_ref["w"], lp_ex["w"]))
         assert bool(jnp.array_equal(lp_ref["b"], lp_ex["b"]))
     assert res.makespan > 0
+
+
+def test_executor_perf_opt_single_device_bit_exact():
+    """The §4.4 Performance-Optimized path on the executor: layer AND
+    local-head weight streams must match the sequential trainer."""
+    from repro import api, data as data_lib
+    from repro.configs.ff_mlp import FFMLPConfig
+    from repro.core import pff_exec
+
+    task = data_lib.mnist_like(n_train=200, n_test=50)
+    cfg = FFMLPConfig(layer_sizes=(784, 48, 48), epochs=2, splits=2,
+                      goodness_fn="perf_opt", batch_size=64, seed=0)
+    ref = api.fit(cfg, task, backend="sequential")
+    res = api.fit(cfg, task, backend="executor", schedule="sequential",
+                  num_nodes=1)
+    assert pff_exec.params_bit_equal(ref.params, res.params,
+                                     with_local_heads=True)
+    assert res.test_acc == ref.test_acc
 
 
 # ---------------------------------------------------------------------------
@@ -81,14 +100,33 @@ def test_executor_sequential_single_device_runs():
 def test_dag_topological_order():
     """build_tasks must list every dep before its dependent."""
     seen = set()
-    for has_head, has_neg in [(False, False), (True, True)]:
+    for has_head, has_neg, has_local in [(False, False, False),
+                                         (True, True, False),
+                                         (False, False, True)]:
         seen.clear()
         for t in pff_dag.build_tasks(3, 4, has_head=has_head,
-                                     has_neg=has_neg):
+                                     has_neg=has_neg,
+                                     has_local_heads=has_local):
             for d in pff_dag.deps(t, 3, has_head=has_head,
-                                  has_neg=has_neg, strict_neg=True):
+                                  has_neg=has_neg, strict_neg=True,
+                                  has_local_heads=has_local):
                 assert d in seen, (t, d)
             seen.add(t)
+
+
+def test_dag_local_head_is_per_layer_dependent():
+    """§4.4: each local_head(k, c) depends on its own train task and its
+    previous-chapter self, and trains on the same node as train(k, c)."""
+    t = pff_dag.Task("local_head", 1, 2)
+    d = pff_dag.deps(t, 3)
+    assert pff_dag.Task("train", 1, 2) in d
+    assert pff_dag.Task("local_head", 1, 1) in d
+    # ...and the chapter-c train task waits for chapter-(c-1)'s local
+    # head, whose weights it backprops through
+    assert pff_dag.Task("local_head", 1, 1) in pff_dag.deps(
+        pff_dag.Task("train", 1, 2), 3, has_local_heads=True)
+    tasks = pff_dag.build_tasks(3, 2, has_local_heads=True)
+    assert pff_dag.Task("local_head", 0, 0) in tasks
 
 
 def test_dag_node_assignments_match_paper():

@@ -9,9 +9,9 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro import data as data_lib, optim
+from repro import api, data as data_lib, optim
 from repro.configs.ff_mlp import FFMLPConfig
-from repro.core import ff_mlp, pff
+from repro.core import ff_mlp
 
 
 @pytest.mark.parametrize("n,batch", [(100, 64), (130, 64), (640, 64),
@@ -65,7 +65,7 @@ def test_train_ff_mlp_non_divisible_dataset():
     cfg = FFMLPConfig(layer_sizes=(784, 300), epochs=60, splits=4,
                       neg_mode="random", classifier="goodness",
                       batch_size=64, seed=0)
-    res = pff.train_ff_mlp(cfg, task)
+    res = api.fit(cfg, task)
     # same bar as test_pff.test_federated_trains_on_shards (one hidden
     # layer learns weakly on the synthetic task; chance is 0.1)
     assert res.test_acc > 0.15
