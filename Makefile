@@ -1,9 +1,15 @@
 PY := PYTHONPATH=src python
 
-.PHONY: test bench bench-smoke pff-exec-smoke api-smoke
+.PHONY: test lint bench bench-smoke pff-exec-smoke api-smoke
 
 test:
 	$(PY) -m pytest -q
+
+# Bug-class lint gate (pyflakes + pycodestyle error classes; config in
+# pyproject.toml [tool.ruff]). CI installs ruff; locally `pip install
+# ruff` first — a missing ruff fails loudly rather than passing silently.
+lint:
+	$(PY) -m ruff check .
 
 # Facade selftest: every registered negatives/goodness/classifier
 # strategy through api.fit's sequential backend on a tiny task, plus

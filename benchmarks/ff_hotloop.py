@@ -89,23 +89,32 @@ def _make_seed_chapter(batch, epochs, theta):
 # Jaxpr matmul-dispatch counter
 # ---------------------------------------------------------------------------
 
-def _count_dots(jaxpr):
+def _count_eqns(jaxpr, names, skip=("pallas_call",)):
+    """Occurrences of the named primitives, recursing into sub-jaxprs
+    but NOT into the ``skip`` call primitives (ops fused inside a Pallas
+    kernel are one dispatch, not separate XLA ops)."""
     n = 0
     for eqn in jaxpr.eqns:
-        if eqn.primitive.name == "dot_general":
+        if eqn.primitive.name in skip:
+            continue
+        if eqn.primitive.name in names:
             n += 1
         for v in eqn.params.values():
             if isinstance(v, jax.core.ClosedJaxpr):
-                n += _count_dots(v.jaxpr)
+                n += _count_eqns(v.jaxpr, names, skip)
             elif isinstance(v, jax.core.Jaxpr):
-                n += _count_dots(v)
+                n += _count_eqns(v, names, skip)
             elif isinstance(v, (tuple, list)):
                 for vv in v:
                     if isinstance(vv, jax.core.ClosedJaxpr):
-                        n += _count_dots(vv.jaxpr)
+                        n += _count_eqns(vv.jaxpr, names, skip)
                     elif isinstance(vv, jax.core.Jaxpr):
-                        n += _count_dots(vv)
+                        n += _count_eqns(vv, names, skip)
     return n
+
+
+def _count_dots(jaxpr):
+    return _count_eqns(jaxpr, ("dot_general",), skip=())
 
 
 def matmul_dispatches_per_step(K, N, batch):
@@ -121,6 +130,25 @@ def matmul_dispatches_per_step(K, N, batch):
                                                       "ref")
     )(lp, xb).jaxpr)
     return seed, stacked
+
+
+def handoff_norm_divide_ops(K, N, batch):
+    """XLA ``div`` ops in the inter-layer hand-off (``ff_mlp.fwd_norm``)
+    jaxpr, per kernel path — ops fused into the Pallas kernel body do
+    not count (they are part of the one ``ff_dense`` dispatch). The ref
+    oracle keeps its separate divide by construction; the fused path
+    must show ZERO, i.e. the norm divide lives in the kernel epilogue —
+    ``benchmarks/run.py`` fails loudly otherwise."""
+    lp = {"w": jnp.zeros((K, N)), "b": jnp.zeros((N,))}
+    x = jnp.zeros((batch, K))
+    out = {}
+    for impl in ("ref", "pallas"):
+        jx = jax.make_jaxpr(
+            lambda lp, x, impl=impl: ff_mlp.fwd_norm(lp, x, impl=impl)
+        )(lp, x)
+        name = "ref_stacked" if impl == "ref" else "pallas_fused"
+        out[name] = _count_eqns(jx.jaxpr, ("div",))
+    return out
 
 
 # ---------------------------------------------------------------------------
@@ -202,6 +230,12 @@ def run(quick=True, out_path=None):
         PAPER_SIZES[0], PAPER_SIZES[1], batch)
     print(f"matmul dispatches per grad step: seed={seed_d} "
           f"stacked={stacked_d}")
+    norm_divs = handoff_norm_divide_ops(PAPER_SIZES[0], PAPER_SIZES[1],
+                                        batch)
+    print(f"norm-divide ops in the inter-layer hand-off jaxpr: "
+          f"ref={norm_divs['ref_stacked']} "
+          f"pallas={norm_divs['pallas_fused']} (0 = fused into the "
+          f"kernel epilogue)")
 
     results = {
         "config": {"n_train": n, "batch": batch, "epochs_per_chapter":
@@ -210,6 +244,7 @@ def run(quick=True, out_path=None):
                    "pallas_interpret": jax.default_backend() != "tpu"},
         "matmul_dispatches_per_step": {"seed_unfused": seed_d,
                                        "stacked": stacked_d},
+        "handoff_norm_divide_ops": norm_divs,
         "layers": [],
         "note": ("pallas timings are interpret-mode on non-TPU backends; "
                  "dispatch counts + grad_max_err are the load-insensitive "

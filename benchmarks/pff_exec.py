@@ -13,7 +13,10 @@ Protocol per row:
      per-device compile warm-up AND yields per-node busy-seconds,
   2. a non-profiled run on warm caches — its wall-clock from first
      dispatch to last-weight-ready is the measured makespan,
-  3. the simulator's prediction replaying the canonical trainer's
+  3. for N > 1, a second warm run with ``overlap=False`` — the
+     serialize-on-demand hand-off baseline (double-buffered vs on-demand
+     makespan, plus prefetched vs critical-path transfer counts),
+  4. the simulator's prediction replaying the canonical trainer's
      task timings under the same node assignment.
 Measured speedup = measured sequential (N=1) makespan / row makespan.
 Utilization_est = profiled busy-seconds / (N * measured makespan).
@@ -42,7 +45,6 @@ if "jax" not in sys.modules:                       # pragma: no cover
         "XLA_FLAGS", "--xla_force_host_platform_device_count=4")
 
 import jax
-import jax.numpy as jnp
 
 from repro import api, data as data_lib
 from repro.configs.ff_mlp import FFMLPConfig
@@ -62,7 +64,7 @@ def _measure(cfg, task, schedule, num_nodes, devices):
     # profiled run is cold, so raw sums overstate busy time).
     durs = pff.task_durations(prof.records)
     busy = sum(durs[(r.kind, r.layer)] for r in prof.records)
-    return timed, {
+    measured = {
         "makespan_s": timed.makespan,
         "busy_s_profiled": busy,
         # clamped: blocked per-task profiling pays a host sync per task
@@ -71,7 +73,21 @@ def _measure(cfg, task, schedule, num_nodes, devices):
         "utilization_est": min(1.0, busy / (num_nodes * timed.makespan))
         if timed.makespan else 1.0,
         "test_acc": timed.test_acc,
+        "handoff": timed.handoff,
     }
+    if num_nodes > 1:
+        # A/B: the serialize-on-demand hand-off (double-buffering off).
+        # One warm run is enough — the jit caches are shared with the
+        # overlap executor (identical shapes/executables), so the only
+        # difference on the clock is WHEN transfers are issued.
+        off = pff_exec.PFFExecutor(cfg, task, schedule, num_nodes,
+                                   devices=devices, overlap=False
+                                   ).run(profile=False)
+        measured["makespan_s_no_overlap"] = off.makespan
+        measured["handoff_no_overlap"] = off.handoff
+        measured["overlap_speedup"] = (off.makespan / timed.makespan
+                                       if timed.makespan else 1.0)
+    return timed, measured
 
 
 def run(quick=True, out_path=None):
@@ -148,12 +164,22 @@ def run(quick=True, out_path=None):
                                     "trainer")
         results["rows"].append(row)
         m = row["measured"]
+        overlap_note = ""
+        if m and "makespan_s_no_overlap" in m:
+            hits = m["handoff"]["prefetch_hits"]
+            cross = m["handoff_no_overlap"]["pulls_cross"]
+            off_s = m["makespan_s_no_overlap"]
+            overlap_note = (f" | no-overlap {off_s:6.2f}s "
+                            f"(x{m['overlap_speedup']:.2f}, "
+                            f"{hits}/{cross} cross-node transfers "
+                            f"prefetched)")
         print(f"{schedule:>13} N={n}: sim speedup {sim.speedup:5.2f}x "
               f"util {sim.utilization:.2f}" +
               (f" | measured makespan {m['makespan_s']:6.2f}s "
                f"speedup {m.get('speedup', 1.0):5.2f}x "
                f"util_est {m['utilization_est']:.2f}"
-               if m else " | not measured (too few devices)"))
+               if m else " | not measured (too few devices)")
+              + overlap_note)
 
     results["failures"] = failures
     if n_dev < max(NODE_COUNTS) and os.path.exists(out_path):

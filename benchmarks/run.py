@@ -11,7 +11,10 @@ Sections (one per paper table/figure + framework-level):
 quick profile (~10 min on this CPU container). ``--only=<section>``
 selects one section — ``--only=ff_hotloop`` is the ``make bench-smoke``
 target. Exits non-zero if any kernel-vs-oracle max error exceeds
-``ERR_BUDGET`` so correctness regressions fail loudly in CI.
+``ERR_BUDGET``, if the fused kernel path leaks a separate norm-divide
+op into the hand-off jaxpr, or if any argument is unrecognized (a
+typo'd ``--only foo`` used to be ignored and silently run EVERY
+section) — regressions and operator error both fail loudly in CI.
 """
 from __future__ import annotations
 
@@ -26,11 +29,20 @@ SECTIONS = ("tables", "lm", "lm_schedules", "lm_negatives", "kernels",
 
 
 def main(argv):
-    full = "--full" in argv
+    full = False
     only = None
     for a in argv:
-        if a.startswith("--only="):
+        if a == "--full":
+            full = True
+        elif a.startswith("--only="):
             only = a.split("=", 1)[1]
+        else:
+            # unknown flags (incl. the space form `--only foo`) used to
+            # be dropped on the floor and every section would run
+            print(f"unknown argument {a!r}; usage: python -m "
+                  f"benchmarks.run [--full] "
+                  f"[--only=<{'|'.join(SECTIONS)}>]")
+            sys.exit(2)
     if only is not None and only not in SECTIONS:
         print(f"unknown --only section {only!r}; "
               f"expected one of {', '.join(SECTIONS)}")
@@ -81,6 +93,12 @@ def main(argv):
         if res["max_grad_err"] > ERR_BUDGET:
             failures.append(f"ff_hotloop grad max_err "
                             f"{res['max_grad_err']:.2e} > {ERR_BUDGET:.0e}")
+        leaked = res["handoff_norm_divide_ops"]["pallas_fused"]
+        if leaked:
+            failures.append(
+                f"ff_hotloop: {leaked} norm-divide op(s) outside the "
+                f"fused kernel in the inter-layer hand-off jaxpr "
+                f"(the divide must run in the kernel epilogue)")
 
     if only in (None, "pff_exec"):
         print("\n##### 6. Real PFF executor: measured vs simulated "

@@ -105,8 +105,8 @@ def _validate_strategies(cfg):
 
 def fit(cfg, task=None, *, backend="sequential", schedule=None,
         num_nodes=1, probe_every=0, verbose=False, profile=False,
-        devices=None, comm_time=0.0, steps=40, batch=8, seq=64,
-        lr=1e-3) -> FitResult:
+        devices=None, overlap=True, comm_time=0.0, steps=40, batch=8,
+        seq=64, lr=1e-3) -> FitResult:
     """Train ``cfg`` on ``task`` with the chosen backend. See the module
     docstring for the backend table.
 
@@ -117,6 +117,10 @@ def fit(cfg, task=None, *, backend="sequential", schedule=None,
     profile: executor backend — collect per-task records + node busy
     times (blocks after every task; run again without it for makespan).
     devices: executor backend — explicit device list.
+    overlap: executor backend — double-buffer the ``device_put``
+    weight/negatives hand-off so transfers overlap compute (the
+    default; False restores the serialize-on-demand hand-off for A/B
+    runs — the weight stream is bit-identical either way).
     comm_time: simulate backend — per-DAG-edge cross-node hand-off cost.
     steps/batch/seq/lr: pod backend — pipeline run length and shapes
     (``task`` may be an iterable of token blocks, or None to use the
@@ -153,7 +157,7 @@ def fit(cfg, task=None, *, backend="sequential", schedule=None,
                             else "all_layers")
     if backend == "executor":
         ex = pff_exec.PFFExecutor(cfg, task, schedule, num_nodes,
-                                  devices=devices)
+                                  devices=devices, overlap=overlap)
         res = ex.run(profile=profile)
         return FitResult(backend=backend, cfg=cfg, params=res.params,
                          schedule=schedule, num_nodes=num_nodes,

@@ -19,36 +19,31 @@ timings under the PFF schedules to derive distributed training time.
 from __future__ import annotations
 
 import functools
-import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro import optim
 from repro.core import ff, strategies
-from repro.kernels import ops
+from repro.kernels import ff_dense as kernels_ff_dense, ops
 
 
-def _norm(x, eps=1e-8):
-    """Hinton's length normalization between FF layers."""
+def _norm(x, eps=kernels_ff_dense.NORM_EPS):
+    """Hinton's length normalization — applied to RAW inputs (label
+    overlays) before the first layer. Between layers the divide is fused
+    into the ``ff_dense`` kernel epilogue (``norm=True``); this XLA form
+    remains only where no ff_dense call produces the activation."""
     return x / (jnp.linalg.norm(x, axis=-1, keepdims=True) + eps)
-
-
-def _norm_via_goodness(y, g, eps=1e-8):
-    """``_norm(y)`` given ``g = sum(y^2, -1)`` — the fused kernel's
-    goodness output IS the squared norm, so the normalizer comes free
-    (sqrt(sum(y^2)) is exactly what ``jnp.linalg.norm`` computes)."""
-    return y / (jnp.sqrt(g)[..., None] + eps)
 
 
 def fwd_norm(lp, x, impl="auto"):
     """One layer forward + Hinton length-norm — the inter-layer hand-off
     shared by the sequential trainer and the real executor (weight-stream
     bit-exactness depends on BOTH calling exactly this). One fused
-    ``ff_dense`` dispatch: activation and normalizer in a single pass."""
-    y, g = ops.ff_dense(x, lp["w"], lp["b"], impl=impl)
-    return _norm_via_goodness(y, g)
+    ``ff_dense`` dispatch with the norm divide in the kernel epilogue:
+    activation, normalizer AND the divide in a single pass."""
+    yn, _ = ops.ff_dense(x, lp["w"], lp["b"], impl=impl, norm=True)
+    return yn
 
 def kernel_impl(cfg):
     """The config's ``ops.ff_dense`` path (auto | pallas | ref)."""
@@ -179,13 +174,13 @@ def train_layer_chapter(lp, opt, x_pos, x_neg, lrs, key, *, batch, epochs,
 
 
 def _perf_opt_loss(lp_and_head, xb, yb, impl="auto"):
-    """§4.4 local-head loss, dense+norm routed through the fused kernel:
-    the layer's activation AND its normalizer come from one ``ff_dense``
-    dispatch (the goodness output is the squared norm); only the small
-    (N, C) head matmul stays a plain dot."""
+    """§4.4 local-head loss on the fused kernel path: activation,
+    normalizer AND the norm divide come from one ``ff_dense`` dispatch
+    (norm=True — in-kernel epilogue on Pallas, with a matching
+    custom_vjp); only the small (N, C) head matmul stays a plain dot."""
     lp, head = lp_and_head
-    y, g = ops.ff_dense(xb, lp["w"], lp["b"], impl=impl)
-    logits = _norm_via_goodness(y, g) @ head["w"] + head["b"]
+    yn, _ = ops.ff_dense(xb, lp["w"], lp["b"], impl=impl, norm=True)
+    logits = yn @ head["w"] + head["b"]
     return jnp.mean(
         -jax.nn.log_softmax(logits)[jnp.arange(xb.shape[0]), yb])
 
@@ -270,15 +265,21 @@ def train_head_chapter(head, opt, feats, y, lrs, key, *, batch, epochs):
 def accumulated_goodness(layers_params, x, impl="auto"):
     """Goodness of layers 2..L (all but first), summed. x already
     label-overlaid. Returns (B,). Runs on the fused kernel path: each
-    layer is one ff_dense dispatch computing activation AND goodness."""
-    h = x
+    layer is ONE ff_dense dispatch computing activation, goodness AND
+    the next layer's normalized input (norm=True epilogue) — the
+    separate per-layer norm reduce + divide are gone."""
+    hn = _norm(x)
     total = jnp.zeros((x.shape[0],), jnp.float32)
     skip_first = len(layers_params) > 1
     for i, lp in enumerate(layers_params):
-        y, g = ops.ff_dense(_norm(h), lp["w"], lp["b"], impl=impl)
+        # the last layer's normalized output feeds nothing — skip the
+        # epilogue there (on Pallas that is a whole normalize sweep)
+        feeds_next = i + 1 < len(layers_params)
+        yn, g = ops.ff_dense(hn, lp["w"], lp["b"], impl=impl,
+                             norm=feeds_next)
         if i >= 1 or not skip_first:
-            total = total + g / y.shape[-1]
-        h = y
+            total = total + g / yn.shape[-1]
+        hn = yn
     return total
 
 
@@ -304,11 +305,10 @@ def softmax_feats(layers_params, x, impl="auto"):
     for a 1-hidden-layer net). Each layer is one fused ``ff_dense``
     dispatch: the goodness output doubles as the feature normalizer."""
     feats = []
-    h = x
+    hn = _norm(x)
     for lp in layers_params:
-        y, g = ops.ff_dense(_norm(h), lp["w"], lp["b"], impl=impl)
-        feats.append(_norm_via_goodness(y, g))
-        h = y
+        hn, _ = ops.ff_dense(hn, lp["w"], lp["b"], impl=impl, norm=True)
+        feats.append(hn)
     if len(feats) > 1:
         feats = feats[1:]
     return jnp.concatenate(feats, axis=-1)
@@ -319,14 +319,12 @@ def perf_opt_scores(params, x, last_only=False, impl="auto"):
     """Performance-Optimized prediction (paper Table 4): sum the local
     classifier logits over all layers, or use only the last layer's.
     The per-layer dense+norm runs on the fused kernel path."""
-    h = x
+    hn = _norm(x)
     total = None
     for lp, head in zip(params["layers"], params["local_heads"]):
-        y, g = ops.ff_dense(_norm(h), lp["w"], lp["b"], impl=impl)
-        hn = _norm_via_goodness(y, g)
+        hn, _ = ops.ff_dense(hn, lp["w"], lp["b"], impl=impl, norm=True)
         logits = jax.nn.log_softmax(hn @ head["w"] + head["b"])
         total = logits if (total is None or last_only) else total + logits
-        h = y
     return total
 
 

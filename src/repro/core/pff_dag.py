@@ -80,6 +80,56 @@ def neg_node_of(schedule: str, num_nodes: int, *, chapter: int) -> int:
     return node_of(schedule, num_nodes, layer=0, chapter=chapter)
 
 
+def chapter_train_nodes(schedule: str, num_nodes: int, n_layers: int, *,
+                        chapter: int) -> List[int]:
+    """All nodes that run train tasks in ``chapter`` — the consumers of
+    anything published FOR that chapter (e.g. regenerated negatives)."""
+    if schedule == "single_layer" and num_nodes > 1:
+        return sorted({k % num_nodes for k in range(n_layers)})
+    return [node_of(schedule, num_nodes, layer=0, chapter=chapter)]
+
+
+def handoff_targets(schedule: str, num_nodes: int, *, n_layers: int,
+                    splits: int, layer: int, chapter: int,
+                    has_head: bool = False, has_neg: bool = False):
+    """Cross-node consumers of train(layer, chapter)'s fresh weights —
+    what the executor's double-buffered hand-off prefetches while the
+    producing node is still busy. Derived from the same ``deps()`` edges
+    and node assignments the dispatch order walks, so a prefetched copy
+    can never be consumed at the wrong version.
+
+    Returns ``(next_train_node, param_consumer_nodes)``:
+
+    * ``next_train_node`` — the node that trains this layer in chapter
+      + 1 and therefore needs the FULL (params, opt, ...) state; None
+      when that is the producing node itself (single_layer: layer k
+      lives on node k every chapter) or when this is the last chapter.
+    * ``param_consumer_nodes`` — nodes that need only the layer PARAMS
+      within this same chapter: the Algorithm-1 forward recompute of
+      later layers, the softmax-head node and the negative-regeneration
+      node (Single-Layer only — in All-Layers/Federated every
+      within-chapter consumer runs on the chapter's own node).
+    """
+    src = node_of(schedule, num_nodes, layer=layer, chapter=chapter)
+    nxt = None
+    if chapter + 1 < splits:
+        n = node_of(schedule, num_nodes, layer=layer, chapter=chapter + 1)
+        if n != src:
+            nxt = n
+    params = set()
+    if schedule == "single_layer" and num_nodes > 1:
+        for k in range(layer + 1, n_layers):
+            params.add(node_of(schedule, num_nodes, layer=k,
+                               chapter=chapter))
+        if has_head:
+            params.add(head_node_of(schedule, num_nodes,
+                                    n_layers=n_layers, chapter=chapter))
+        if has_neg:
+            params.add(neg_node_of(schedule, num_nodes, chapter=chapter))
+    params.discard(src)
+    return nxt, sorted(params)
+
+
 def build_tasks(n_layers: int, splits: int, *, has_head: bool = False,
                 has_neg: bool = False,
                 has_local_heads: bool = False) -> List[Task]:

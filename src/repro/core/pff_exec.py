@@ -36,8 +36,25 @@ chapter-c model), which is exactly what the sequential trainer does;
 RandomNEG negatives depend only on the PRNG key, so each node
 regenerates its own locally — parallel, and still bit-exact.
 
+Double-buffered hand-off: with ``overlap=True`` (the default) every
+cross-node ``device_put`` along a DAG edge is issued the moment its
+producing task has been DISPATCHED, not when its consuming task needs
+the data — per-(tree, node) transfer slots (``_Handoff``) so the next
+chapter's weights/negatives stream onto their destination node while
+the current chapter's compute is still in flight. The prefetch targets
+come from ``pff_dag.handoff_targets`` / ``chapter_train_nodes`` — the
+same DAG edges the dispatch order walks — and every slot is tagged with
+the producing chapter (version): a consumer takes the prefetched copy
+only when the version matches the state it would have pulled on demand,
+so the overlapped weight stream is the bit-exact SAME weight stream
+(``device_put`` moves bits, the version gate proves they are the right
+ones; the on/off A-B case in ``tests/test_pff_exec.py`` enforces it).
+``overlap=False`` restores the serialize-on-demand hand-off for A/B
+measurement.
+
 ``benchmarks/pff_exec.py`` records this executor's measured makespan
-next to the simulator's prediction (``BENCH_pff_exec.json``).
+next to the simulator's prediction (``BENCH_pff_exec.json``), with
+overlap on and off, plus the hand-off transfer counts.
 
 All strategy variation (negatives / goodness / classifier) comes from
 the ``repro.core.strategies`` registries — the same objects the
@@ -57,7 +74,6 @@ from typing import Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro import data as data_lib, optim
 from repro.core import ff, ff_mlp, pff, pff_dag, strategies
@@ -73,6 +89,63 @@ class ExecResult:
     test_acc: float
     records: Optional[List[pff.TaskRecord]]  # per-task durations (profile)
     node_busy: Optional[List[float]]         # per-node busy seconds (profile)
+    handoff: Optional[dict] = None           # transfer-slot counters
+
+
+class _Handoff:
+    """Double-buffered transfer slots for the DAG hand-off.
+
+    ``prefetch`` enqueues an async ``device_put`` of a pytree onto its
+    future consumer's device and parks it under ``(name, node)`` tagged
+    with the producing chapter. ``take`` returns the parked copy iff the
+    version matches what the consumer would have pulled on demand —
+    otherwise (or with overlap disabled) it falls back to a synchronous-
+    path ``device_put`` exactly like the pre-overlap executor. Slots
+    whose trees will be DONATED by the consuming jit are popped on hit
+    (``pop=True``) so an invalidated buffer can never be re-served;
+    params-only slots stay parked so several same-chapter consumers on
+    one node share a single transfer.
+
+    Counters (the dispatch-count measurement in ``BENCH_pff_exec.json``):
+    ``prefetch_issued``/``prefetch_hits`` and the fallback pulls, split
+    into ``pulls_cross`` (a real inter-node transfer on the consumer's
+    critical path — what double-buffering exists to hide) vs
+    ``pulls_local`` (same-device no-ops).
+    """
+
+    def __init__(self, devices, enabled: bool):
+        self.devices = devices
+        self.enabled = enabled
+        self.slots: Dict[tuple, tuple] = {}
+        self.stats = {"prefetch_issued": 0, "prefetch_hits": 0,
+                      "pulls_cross": 0, "pulls_local": 0}
+
+    def prefetch(self, name, node: int, version: int, tree):
+        if not self.enabled:
+            return
+        self.slots[(name, node)] = (
+            version, jax.device_put(tree, self.devices[node]))
+        self.stats["prefetch_issued"] += 1
+
+    def _on_device(self, tree, dev) -> bool:
+        leaves = jax.tree_util.tree_leaves(tree)
+        try:
+            return bool(leaves) and leaves[0].devices() == {dev}
+        except AttributeError:                      # non-committed leaf
+            return False
+
+    def take(self, name, node: int, version: int, tree, *,
+             pop: bool = False):
+        slot = self.slots.get((name, node))
+        if slot is not None and slot[0] == version:
+            if pop:
+                del self.slots[(name, node)]
+            self.stats["prefetch_hits"] += 1
+            return slot[1]
+        dev = self.devices[node]
+        self.stats["pulls_local" if self._on_device(tree, dev)
+                   else "pulls_cross"] += 1
+        return jax.device_put(tree, dev)
 
 
 class PFFExecutor:
@@ -84,7 +157,7 @@ class PFFExecutor:
     """
 
     def __init__(self, cfg, task: data_lib.ImageTask, schedule: str,
-                 num_nodes: int, *, devices=None):
+                 num_nodes: int, *, devices=None, overlap: bool = True):
         if schedule not in pff_dag.SCHEDULES:
             raise ValueError(f"unknown schedule {schedule!r}; expected "
                              f"one of {pff_dag.SCHEDULES}")
@@ -94,6 +167,7 @@ class PFFExecutor:
         self.task = task
         self.schedule = schedule
         self.num_nodes = num_nodes
+        self.overlap = overlap
         self.devices = (list(devices)[:num_nodes] if devices is not None
                         else mesh_lib.pff_node_devices(num_nodes))
         self.n_layers = len(cfg.layer_sizes) - 1
@@ -153,10 +227,31 @@ class PFFExecutor:
         """Async hand-off of a param/opt pytree onto ``node``'s device."""
         return jax.device_put(tree, self.devices[node])
 
+    def _layer_params(self, k, node):
+        """Layer k's current params resident on ``node`` — prefetched by
+        the producing train task when the DAG says this node consumes
+        them, on-demand ``device_put`` otherwise."""
+        return self._handoff.take(("params", k), node, self._ver[k],
+                                  self._states[k][0])
+
+    def _prefetch_state(self, k, chapter, state):
+        """Publish train(k, chapter)'s output toward its DAG consumers
+        while the producing node is still crunching (double-buffering)."""
+        nxt, param_nodes = pff_dag.handoff_targets(
+            self.schedule, self.num_nodes, n_layers=self.n_layers,
+            splits=self.cfg.splits, layer=k, chapter=chapter,
+            has_head=self.has_head,
+            has_neg=self.has_neg and self.neg.needs_scores)
+        if nxt is not None:
+            self._handoff.prefetch(("state", k), nxt, chapter, state)
+        for node in param_nodes:
+            self._handoff.prefetch(("params", k), node, chapter, state[0])
+
     def _fwd(self, lp, x):
         """One layer forward + Hinton length-norm — the inter-layer
         hand-off. ``ff_mlp.fwd_norm`` is the exact call the sequential
-        trainer makes (bit-exactness depends on it)."""
+        trainer makes (bit-exactness depends on it); the norm divide
+        runs in the ``ff_dense`` kernel epilogue."""
         return ff_mlp.fwd_norm(lp, x, impl=self.impl)
 
     def _xn0_for(self, chapter, node):
@@ -173,10 +268,11 @@ class PFFExecutor:
                 jax.random.fold_in(self.kneg, chapter - 1), self.cfg,
                 None, const["x"], const["y"], None))
         # score-needing (AdaptiveNEG): published by chapter-(c-1)'s
-        # neg_gen task
+        # neg_gen task (and prefetched to this node while chapter c-1
+        # was still computing, when overlap is on)
         src_chapter, xn0 = self._neg
         assert src_chapter == chapter - 1, (src_chapter, chapter)
-        return self._pull(xn0, node)
+        return self._handoff.take(("neg",), node, src_chapter, xn0)
 
     def _chapter_inputs(self, chapter, node):
         """(acts, extras) exactly as the sequential trainer builds them:
@@ -203,13 +299,20 @@ class PFFExecutor:
         """One chapter-train task via the goodness strategy. For
         Performance-Optimized goodness this call carries the layer's
         local_head task fused in (see module docstring); it records as
-        ONE train task — exactly like the sequential trainer's timing."""
+        ONE train task — exactly like the sequential trainer's timing.
+        The incoming state was prefetched onto ``node`` while the
+        previous chapter computed (popped: the jit donates its buffers);
+        the outgoing state is immediately published toward its DAG
+        consumers."""
         t0 = time.perf_counter()
-        state = self._pull(self._states[k], node)
+        state = self._handoff.take(("state", k), node, self._ver[k],
+                                   self._states[k], pop=True)
         state = self.good.train_chapter(
             state, acts, extras, lrs, jax.random.fold_in(kc, k),
             cfg=self.cfg, epochs=self.C)
         self._states[k] = state
+        self._ver[k] = chapter
+        self._prefetch_state(k, chapter, state)
         self._maybe_record(profile, node, "train", k, chapter, t0,
                            state[0])
         return state[0]
@@ -220,16 +323,25 @@ class PFFExecutor:
         xn_all = (const["x_neutral"] if idx is None
                   else const["x_neutral"][idx])
         # pull every layer onto the head node (no-op when already there,
-        # e.g. all_layers; real hand-off for single_layer)
+        # e.g. all_layers; prefetched hand-off for single_layer)
         feats = ff_mlp.softmax_feats(
-            [self._pull(s[0], node) for s in self._states], xn_all,
-            impl=self.impl)
-        head, op = self._pull(self._head, node)
+            [self._layer_params(k, node)
+             for k in range(self.n_layers)], xn_all, impl=self.impl)
+        head, op = self._handoff.take(("head",), node, self._head_ver,
+                                      self._head, pop=True)
         head, op = ff_mlp.train_head_chapter(
             head, op, feats, const["y"] if idx is None else const["y"][idx],
             lrs_head, jax.random.fold_in(kc, 77),
             batch=self.cfg.batch_size, epochs=self.C)
         self._head = (head, op)
+        self._head_ver = chapter
+        if chapter + 1 < self.cfg.splits:
+            nxt = pff_dag.head_node_of(self.schedule, self.num_nodes,
+                                       n_layers=self.n_layers,
+                                       chapter=chapter + 1)
+            if nxt != node:
+                self._handoff.prefetch(("head",), nxt, chapter,
+                                       (head, op))
         self._maybe_record(profile, node, "head", self.n_layers, chapter,
                            t0, head["w"])
 
@@ -240,13 +352,21 @@ class PFFExecutor:
         matching the sequential trainer)."""
         const = self._const[node]
         t0 = time.perf_counter()
-        params = {"layers": [self._pull(s[0], node)
-                             for s in self._states]}
+        params = {"layers": [self._layer_params(k, node)
+                             for k in range(self.n_layers)]}
         scores = pff._class_scores_chunked(params, const["x"], self.cfg)
         xn0 = ff_mlp._norm(self.neg.fn(
             jax.random.fold_in(self.kneg, chapter), self.cfg, params,
             const["x"], const["y"], scores))
         self._neg = (chapter, xn0)
+        # publish toward every node that trains chapter c+1 while the
+        # current chapter's tail (head task etc.) is still in flight
+        if chapter + 1 < self.cfg.splits:
+            for nxt in pff_dag.chapter_train_nodes(
+                    self.schedule, self.num_nodes, self.n_layers,
+                    chapter=chapter + 1):
+                if nxt != node:
+                    self._handoff.prefetch(("neg",), nxt, chapter, xn0)
         self._maybe_record(profile, node, "neg_gen", -1, chapter, t0, xn0)
 
     # ---- schedule drivers ------------------------------------------------
@@ -281,7 +401,7 @@ class PFFExecutor:
                                    layer=k, chapter=chapter)
             acts, extras = self._chapter_inputs(chapter, node)
             for j in range(k):       # Algorithm-1 forward recompute
-                w_j = self._pull(self._states[j][0], node)
+                w_j = self._layer_params(j, node)
                 acts = tuple(self._fwd(w_j, a) for a in acts)
             self._train_task(k, chapter, node, acts, extras, lrs, kc,
                              profile)
@@ -309,6 +429,9 @@ class PFFExecutor:
         self._records: List[pff.TaskRecord] = []
         self._busy = [0.0] * self.num_nodes
         self._neg: Tuple[int, object] = (-1, None)
+        self._ver = [-1] * self.n_layers       # chapter of last train(k)
+        self._head_ver = -1
+        self._handoff = _Handoff(self.devices, self.overlap)
 
         t_start = time.perf_counter()
         # initial placement rides the timed window: it is part of the
@@ -334,7 +457,8 @@ class PFFExecutor:
                               impl=self.impl)
         return ExecResult(final, self.schedule, self.num_nodes, makespan,
                           acc, self._records if profile else None,
-                          list(self._busy) if profile else None)
+                          list(self._busy) if profile else None,
+                          dict(self._handoff.stats))
 
 
 def run_pff_exec(cfg, task, schedule, num_nodes, *, devices=None,
@@ -381,10 +505,16 @@ def params_bit_equal(a, b, *, with_head=False, with_local_heads=False):
 # ---------------------------------------------------------------------------
 
 def _check_case(schedule, nodes, splits, n_train, neg_mode, classifier,
-                goodness_fn="sumsq", *, check_sim_bound=False):
+                goodness_fn="sumsq", *, check_sim_bound=False,
+                check_overlap_ab=False):
     """Trains one config both ways — THROUGH THE FACADE (``api.fit``) —
     and returns a list of failure strings (empty = the executor
-    reproduced the sequential trainer's weight stream bit-exactly)."""
+    reproduced the sequential trainer's weight stream bit-exactly).
+
+    check_overlap_ab: additionally runs the executor with the
+    double-buffered hand-off DISABLED and requires the overlap-on and
+    overlap-off weight streams to be bit-identical to each other (the
+    prefetched copies must be the same bits as the on-demand pulls)."""
     from repro import api
     from repro.configs.ff_mlp import FFMLPConfig
 
@@ -402,6 +532,22 @@ def _check_case(schedule, nodes, splits, n_train, neg_mode, classifier,
 
     failures = []
     perf_opt = goodness_fn == "perf_opt"
+    if check_overlap_ab:
+        off = api.fit(cfg, task, backend="executor", schedule=schedule,
+                      num_nodes=nodes, overlap=False)
+        stats_on, stats_off = res.raw.handoff, off.raw.handoff
+        if not params_bit_equal(off.params, res.params,
+                                with_head=classifier == "softmax",
+                                with_local_heads=perf_opt):
+            failures.append(f"{schedule}: overlap-on vs overlap-off "
+                            "weight streams diverged")
+        if stats_off["prefetch_issued"] != 0:
+            failures.append(f"{schedule}: overlap=False still issued "
+                            f"{stats_off['prefetch_issued']} prefetches")
+        if nodes > 1 and stats_on["prefetch_hits"] == 0:
+            failures.append(f"{schedule}: overlap=True never hit a "
+                            f"prefetched slot ({stats_on})")
+        print(f"  overlap A/B {schedule}: on={stats_on} off={stats_off}")
     if not params_bit_equal(ref.params, res.params,
                             with_head=classifier == "softmax",
                             with_local_heads=perf_opt):
@@ -447,6 +593,13 @@ def _check_case(schedule, nodes, splits, n_train, neg_mode, classifier,
 # federated shards of 130 hit a different (also non-divisible) tail.
 # The perf_opt rows check the §4.4 path (fused per-layer local-head
 # task) end to end, including the single_layer forward recompute.
+# The _AB_CASES rows double as the double-buffering A/B gate: row 1
+# (all_layers adaptive softmax) routes published negatives, the softmax
+# head and full layer states through the next-chapter prefetch; row 3
+# (single_layer random) covers the params-only forward-recompute
+# fan-out; row 6 (single_layer adaptive softmax) covers the
+# single_layer head-node and published-negatives fan-out paths, which
+# rows 1/3 never create slots for.
 _MATRIX = (
     ("all_layers", 4, 4, 520, "random", "goodness"),
     ("all_layers", 4, 3, 520, "adaptive", "softmax"),
@@ -454,7 +607,10 @@ _MATRIX = (
     ("single_layer", 2, 3, 520, "random", "goodness"),
     ("all_layers", 4, 3, 520, "random", "goodness", "perf_opt"),
     ("single_layer", 2, 3, 520, "random", "goodness", "perf_opt"),
+    ("single_layer", 2, 3, 520, "adaptive", "softmax"),
 )
+# rows that additionally run the overlap-on vs overlap-off comparison
+_AB_CASES = (1, 3, 6)
 
 
 def _selftest(argv=None):
@@ -483,12 +639,14 @@ def _selftest(argv=None):
     failures = []
     if args.matrix:
         for i, case in enumerate(_MATRIX):
-            failures += _check_case(*case, check_sim_bound=i == 0)
+            failures += _check_case(*case, check_sim_bound=i == 0,
+                                    check_overlap_ab=i in _AB_CASES)
     else:
         failures = _check_case(args.schedule, args.nodes, args.splits,
                                args.n_train, args.neg_mode,
                                args.classifier, args.goodness_fn,
-                               check_sim_bound=True)
+                               check_sim_bound=True,
+                               check_overlap_ab=True)
     if failures:
         print("SELFTEST FAILED:\n  " + "\n  ".join(failures))
         return 1

@@ -26,7 +26,7 @@ import jax.numpy as jnp
 from repro import optim
 from repro.core import ff
 from repro.core.pff import TaskRecord
-from repro.models import blocks, common, transformer
+from repro.models import blocks, transformer
 from repro.models.mlp import NO_DIST
 
 

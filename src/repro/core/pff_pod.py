@@ -26,8 +26,6 @@ single-pod path; only WHERE a block trains changes — the paper's claim.
 """
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
@@ -35,7 +33,7 @@ from jax.sharding import PartitionSpec as P
 from repro import optim, sharding
 from repro.core import ff
 from repro.models import blocks, common
-from repro.models.mlp import Dist, NO_DIST
+from repro.models.mlp import NO_DIST
 
 
 def make_pff_pod_step(cfg, mesh, *, lr=1e-3, seed=0, theta=None):
@@ -56,9 +54,6 @@ def make_pff_pod_step(cfg, mesh, *, lr=1e-3, seed=0, theta=None):
     stages = mesh.shape["stage"]
     assert repeat % stages == 0, (repeat, stages)
     theta = theta if theta is not None else cfg.ff.theta
-    inner_dist = Dist(mesh=mesh, batch_axes=("data",),
-                      model_axis="model",
-                      fsdp_axis="data" if cfg.moe is not None else None)
 
     def local_ff_update(x, unit_p, unit_m, unit_v, is_pos, step):
         """One block-unit FF update (same math as core.train)."""

@@ -11,6 +11,22 @@ accumulate across the j steps in the same VMEM scratch-free output block
 (revisited blocks are legal because the TPU grid is executed
 sequentially minor-to-major).
 
+``norm=True`` additionally fuses Hinton's inter-layer length
+normalization into the kernel epilogue: the goodness output IS the
+squared norm, so once a row-block's g is fully accumulated the kernel
+divides the activations by ``sqrt(g) + NORM_EPS`` in place. To stay
+inside Pallas TPU's documented residency guarantee (an output block is
+only preserved across CONSECUTIVE grid steps — the same rule the g
+accumulation relies on; a revisit after eviction is undefined), the
+normed kernel widens the y output block to the whole row (bm, N) with
+a j-constant index map: the row block stays resident in VMEM for the
+entire inner j sweep (~1 MB at the paper's N=2000), each step stores
+its (bm, bn) column slice, and the j == nj-1 step normalizes the
+resident block before it is written out. The epilogue therefore costs
+ZERO extra HBM traffic — y goes out exactly once, already normalized,
+and the separate norm reduction, sqrt, divide (and g's round-trip)
+all disappear as XLA dispatches.
+
 Tile defaults are MXU-aligned (128x128); K is streamed whole per tile —
 for the paper's [784, 2000] layers x(bm, K) + w(K, bn) comfortably fit
 VMEM (784*128*4 + 784*128*4 ~= 0.8 MB).
@@ -24,13 +40,19 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 
-def _kernel(x_ref, w_ref, b_ref, y_ref, g_ref):
-    j = pl.program_id(1)
+# Hinton's inter-layer normalization epsilon — the ONE constant shared
+# by the fused epilogue, the jnp oracle (ref.ff_dense_norm_ref) and
+# ff_mlp._norm, so the kernel and XLA paths divide by the same number.
+NORM_EPS = 1e-8
+
+
+def _tile_y_g(x_ref, w_ref, b_ref, g_ref, j):
+    """The shared per-(i, j) compute: (bm, bn) activation tile plus the
+    row-block goodness accumulation into the resident g block."""
     h = jnp.dot(x_ref[...], w_ref[...],
                 preferred_element_type=jnp.float32)
     h = h + b_ref[...][None, :]
     y = jnp.maximum(h, 0.0)
-    y_ref[...] = y.astype(y_ref.dtype)
     g_part = jnp.sum(y * y, axis=1)
 
     @pl.when(j == 0)
@@ -41,10 +63,40 @@ def _kernel(x_ref, w_ref, b_ref, y_ref, g_ref):
     def _acc():
         g_ref[...] = g_ref[...] + g_part
 
+    return y
 
-@functools.partial(jax.jit, static_argnames=("bm", "bn", "interpret"))
-def ff_dense(x, w, b, *, bm=128, bn=128, interpret=True):
-    """x: (M, K), w: (K, N), b: (N,) -> (y (M, N), goodness (M,) f32)."""
+
+def _kernel(x_ref, w_ref, b_ref, y_ref, g_ref):
+    j = pl.program_id(1)
+    y = _tile_y_g(x_ref, w_ref, b_ref, g_ref, j)
+    y_ref[...] = y.astype(y_ref.dtype)
+
+
+def _kernel_norm(x_ref, w_ref, b_ref, y_ref, g_ref, *, bn, nj):
+    # y_ref is the whole (bm, N) row block, resident across the j sweep
+    # (j-constant index map — the consecutive-revisit accumulation
+    # guarantee, same as g_ref); each step fills its column slice.
+    j = pl.program_id(1)
+    y = _tile_y_g(x_ref, w_ref, b_ref, g_ref, j)
+    y_ref[:, pl.ds(j * bn, bn)] = y.astype(y_ref.dtype)
+
+    @pl.when(j == nj - 1)
+    def _normalize():
+        # g is now fully accumulated; divide the still-resident row
+        # block in place before it is written out — the fused epilogue.
+        yy = y_ref[...].astype(jnp.float32)
+        scale = jnp.sqrt(g_ref[...]) + NORM_EPS
+        y_ref[...] = (yy / scale[:, None]).astype(y_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "interpret",
+                                             "norm"))
+def ff_dense(x, w, b, *, bm=128, bn=128, interpret=True, norm=False):
+    """x: (M, K), w: (K, N), b: (N,) -> (y (M, N), goodness (M,) f32).
+
+    norm=True: y is length-normalized in the kernel epilogue
+    (``y / (sqrt(g) + NORM_EPS)``); g stays the RAW pre-norm goodness.
+    """
     M, K = x.shape
     _, N = w.shape
     bm = min(bm, M)
@@ -55,22 +107,33 @@ def ff_dense(x, w, b, *, bm=128, bn=128, interpret=True):
         xp = jnp.pad(x, ((0, Mp - M), (0, 0)))
         wp = jnp.pad(w, ((0, 0), (0, Np - N)))
         bp = jnp.pad(b, (0, Np - N))
-        y, g = ff_dense(xp, wp, bp, bm=bm, bn=bn, interpret=interpret)
+        # padded N columns are zero (w and b both padded with zeros), so
+        # they contribute nothing to g — the in-kernel normalizer of the
+        # real columns is exact.
+        y, g = ff_dense(xp, wp, bp, bm=bm, bn=bn, interpret=interpret,
+                        norm=norm)
         return y[:M, :N], g[:M]
 
-    grid = (M // bm, N // bn)
+    nj = N // bn
+    grid = (M // bm, nj)
+    in_specs = [
+        pl.BlockSpec((bm, K), lambda i, j: (i, 0)),
+        pl.BlockSpec((K, bn), lambda i, j: (0, j)),
+        pl.BlockSpec((bn,), lambda i, j: (j,)),
+    ]
+    if norm:
+        kernel = functools.partial(_kernel_norm, bn=bn, nj=nj)
+        # whole-row y block, resident across the inner j sweep
+        y_spec = pl.BlockSpec((bm, N), lambda i, j: (i, 0))
+    else:
+        kernel = _kernel
+        y_spec = pl.BlockSpec((bm, bn), lambda i, j: (i, j))
+    out_specs = [y_spec, pl.BlockSpec((bm,), lambda i, j: (i,))]
     y, g = pl.pallas_call(
-        _kernel,
+        kernel,
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((bm, K), lambda i, j: (i, 0)),
-            pl.BlockSpec((K, bn), lambda i, j: (0, j)),
-            pl.BlockSpec((bn,), lambda i, j: (j,)),
-        ],
-        out_specs=[
-            pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
-            pl.BlockSpec((bm,), lambda i, j: (i,)),
-        ],
+        in_specs=in_specs,
+        out_specs=out_specs,
         out_shape=[
             jax.ShapeDtypeStruct((M, N), x.dtype),
             jax.ShapeDtypeStruct((M,), jnp.float32),

@@ -36,7 +36,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.kernels.ff_dense import ff_dense as _ff_dense_fwd
+from repro.kernels.ff_dense import NORM_EPS, ff_dense as _ff_dense_fwd
 
 
 def _bwd_kernel(x_ref, w_ref, y_ref, dyo_ref, dg_ref,
@@ -139,3 +139,66 @@ def _ff_dense_vjp_bwd(interpret, res, cts):
 
 
 ff_dense_vjp.defvjp(_ff_dense_vjp_fwd, _ff_dense_vjp_bwd)
+
+
+# ---------------------------------------------------------------------------
+# Normed variant: the kernel's fused inter-layer norm epilogue,
+# differentiable. yn = y / (sqrt(g) + eps) with g = sum(y^2, -1).
+#
+# Backward math. Write s = sqrt(g), u = 1 / (s + eps), so yn = y * u and
+# u depends on y only through g. For cotangents (dyn, dg_ct) the chain
+# rule through the normalizer gives the POST-ReLU gradient
+#
+#     dy = dyn * u  +  (2 * dg_ct  -  (dyn . y) * u^2 / s) * y
+#
+# ((dyn . y) is the row dot product; the u^2/s term is d(1/(s+eps))/dg
+# = -u^2 / (2s) times dg/dy = 2y). That is exactly the
+# ``dy_out + 2 * y * dg`` form the existing fused backward kernel
+# rebuilds per tile, so the normed backward delegates to the SAME
+# ``ff_dense_bwd`` Pallas kernel with folded cotangents
+#
+#     dy_out' = dyn * u        dg' = dg_ct - (dyn . y) * u^2 / (2s)
+#
+# — only O(M) / O(M*N) element-wise prep runs outside the kernel, never
+# an extra matmul. Raw y is rebuilt from the residuals as yn * (s + eps)
+# (same sign as y, so the kernel's ReLU mask is unchanged). All-ReLU-dead
+# rows (g = 0) get an EXACT zero gradient here: dg' is 0/0 = NaN for
+# them, but the bwd kernel multiplies it by y = 0 and then applies the
+# y > 0 mask via jnp.where, which discards the NaN. jax.grad of the
+# composed oracle instead propagates NaN on such rows (d sqrt(g) at
+# g = 0 is inf) — the fused path is the well-defined one, and the two
+# only differ on rows where the oracle has no usable gradient at all.
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def ff_dense_norm_vjp(x, w, b, interpret=True):
+    """Differentiable fused FF layer WITH the in-kernel norm epilogue.
+    Returns (yn (M, N) length-normalized, RAW goodness (M,)).
+
+    ``interpret`` must be passed positionally (custom_vjp nondiff arg);
+    use True everywhere except on a real TPU.
+    """
+    return _ff_dense_fwd(x, w, b, interpret=interpret, norm=True)
+
+
+def _ff_dense_norm_vjp_fwd(x, w, b, interpret):
+    yn, g = _ff_dense_fwd(x, w, b, interpret=interpret, norm=True)
+    return (yn, g), (x, w, b, yn, g)
+
+
+def _ff_dense_norm_vjp_bwd(interpret, res, cts):
+    x, w, b, yn, g = res
+    dyn, dg_ct = cts
+    s = jnp.sqrt(g)
+    u = 1.0 / (s + NORM_EPS)
+    scale = s + NORM_EPS
+    y = yn * scale[:, None]
+    rowdot = jnp.sum(dyn * yn, axis=-1) * scale      # = dyn . y
+    dg_eff = dg_ct - rowdot * u * u / (2.0 * s)
+    dy_out_eff = dyn * u[:, None]
+    dx, dw, db = ff_dense_bwd(x, w, y, dy_out_eff, dg_eff,
+                              interpret=interpret)
+    return dx, dw, db.astype(b.dtype)
+
+
+ff_dense_norm_vjp.defvjp(_ff_dense_norm_vjp_fwd, _ff_dense_norm_vjp_bwd)

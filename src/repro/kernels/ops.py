@@ -12,7 +12,10 @@ from __future__ import annotations
 import jax
 
 from repro.kernels import ref
-from repro.kernels.ff_dense_vjp import ff_dense_vjp as _ff_dense_vjp
+from repro.kernels.ff_dense_vjp import (
+    ff_dense_norm_vjp as _ff_dense_norm_vjp,
+    ff_dense_vjp as _ff_dense_vjp,
+)
 from repro.kernels.flash_attention import flash_attention as _flash_pallas
 from repro.kernels.mamba2_ssd import mamba2_ssd as _ssd_pallas
 
@@ -26,23 +29,31 @@ def _on_tpu():
 FF_DENSE_IMPLS = ("auto", "pallas", "ref")
 
 
-def ff_dense(x, w, b, *, impl="auto", force_pallas=False):
+def ff_dense(x, w, b, *, impl="auto", norm=False, force_pallas=False):
     """Fused (or reference) y = relu(x @ w + b), g = sum(y^2, -1).
 
     impl: "auto" picks Pallas on TPU and the jnp oracle elsewhere;
     "pallas" forces the fused kernel (interpret mode off-TPU); "ref"
     forces the oracle. ``force_pallas=True`` is the legacy spelling of
     impl="pallas". Differentiable under jax.grad on every path.
+
+    norm=True: y is returned length-normalized (Hinton's inter-layer
+    hand-off) — on the Pallas path the divide runs in the kernel
+    epilogue, on the ref path in the jnp oracle; g stays the RAW
+    pre-norm goodness on both.
     """
     if force_pallas:
         impl = "pallas"
     if impl == "auto":
         impl = "pallas" if _on_tpu() else "ref"
     if impl == "pallas":
-        return _ff_dense_vjp(x, w, b, not _on_tpu())
+        fused = _ff_dense_norm_vjp if norm else _ff_dense_vjp
+        return fused(x, w, b, not _on_tpu())
     if impl != "ref":
         raise ValueError(f"unknown ff_dense impl {impl!r}; expected one "
                          f"of {' | '.join(FF_DENSE_IMPLS)}")
+    if norm:
+        return ref.ff_dense_norm_ref(x, w, b)
     return ref.ff_dense_ref(x, w, b)
 
 

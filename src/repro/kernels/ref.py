@@ -4,6 +4,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.ff_dense import NORM_EPS
+
 
 def ff_dense_ref(x, w, b):
     y = jnp.maximum(
@@ -11,6 +13,19 @@ def ff_dense_ref(x, w, b):
         + b.astype(jnp.float32)[None, :], 0.0)
     g = jnp.sum(y * y, axis=1)
     return y.astype(x.dtype), g
+
+
+def ff_dense_norm_ref(x, w, b):
+    """``ff_dense_ref`` with Hinton's inter-layer length normalization
+    applied to y — the oracle for the Pallas kernel's fused norm
+    epilogue. g stays the RAW pre-norm goodness. The divide composes
+    the exact op sequence the pre-fusion hand-off ran outside the
+    kernel (``y / (sqrt(g) + eps)``, with sum-then-sqrt matching
+    ``jnp.linalg.norm``), so the sequential trainer's ref-path weight
+    stream is bit-identical to what it was when the divide lived
+    outside the kernel."""
+    y, g = ff_dense_ref(x, w, b)
+    return (y / (jnp.sqrt(g)[..., None] + NORM_EPS)).astype(x.dtype), g
 
 
 def flash_attention_ref(q, k, v, *, causal=True, window=None):

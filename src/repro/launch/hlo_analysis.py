@@ -24,7 +24,7 @@ condition computation — exact for scan-generated loops.
 from __future__ import annotations
 
 import re
-from typing import Dict, List, Tuple
+from typing import Dict, List
 
 _DTYPE_BYTES = {"f64": 8, "f32": 4, "f16": 2, "bf16": 2, "s64": 8,
                 "s32": 4, "s16": 2, "s8": 1, "u64": 8, "u32": 4,

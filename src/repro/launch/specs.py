@@ -8,7 +8,7 @@ import jax
 import jax.numpy as jnp
 
 from repro import sharding
-from repro.configs.base import INPUT_SHAPES, SUBQUADRATIC
+from repro.configs.base import SUBQUADRATIC
 from repro.models import common, transformer
 
 
@@ -82,7 +82,6 @@ def param_specs_abstract(cfg, mesh=None, with_opt=True, seed=0):
     p_shape = jax.eval_shape(
         lambda k: transformer.init(k, cfg), jax.random.PRNGKey(seed))
     if with_opt:
-        from repro import optim
         o_shape = jax.eval_shape(lambda: {
             "m": jax.tree.map(
                 lambda s: jnp.zeros(s.shape, jnp.float32), p_shape),

@@ -9,8 +9,6 @@ validated against this path.
 """
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
 

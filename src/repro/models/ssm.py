@@ -55,7 +55,6 @@ def _causal_conv(x, w):
 def _proj_inputs(p, cfg, x):
     s = cfg.ssm
     d_inner = s.expand * cfg.d_model
-    H = d_inner // s.head_dim
     N = s.state_dim
     zxbcdt = x @ p["in_proj"]
     return jnp.split(

@@ -2,9 +2,7 @@
 registries (round-trip + custom registration), the CIFAR variant
 end-to-end, and the deprecation shims for the old entry points."""
 import dataclasses
-import warnings
 
-import jax.numpy as jnp
 import numpy as np
 import pytest
 

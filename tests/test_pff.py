@@ -1,8 +1,6 @@
 """PFF schedule tests: training improves accuracy; the simulator respects
 the task DAG; schedule properties match the paper's qualitative claims.
 Training runs go through the supported surface (``repro.api.fit``)."""
-import jax
-import numpy as np
 import pytest
 
 from repro import api, data as data_lib

@@ -9,7 +9,10 @@ adaptive+softmax), Federated, and Single-Layer, each checked for
 weight-stream BIT-EQUALITY against the sequential trainer, plus the
 simulate-vs-measured makespan sanity bound. Every matrix case uses an
 n_train that is NOT divisible by the batch size, so the tail-batch
-path is exercised end to end.
+path is exercised end to end. The _AB_CASES rows additionally run the
+executor with the double-buffered hand-off DISABLED and require the
+overlap-on and overlap-off weight streams to be bit-identical (and the
+overlap run to actually hit its prefetched transfer slots).
 
 In-process tests cover what works on one device: the executor's
 argument validation and the DAG module it shares with the simulator.
@@ -150,3 +153,73 @@ def test_dag_strict_neg_gates_next_chapter():
     d_strict = pff_dag.deps(t, 2, has_neg=True, strict_neg=True)
     assert pff_dag.Task("neg_gen", -1, 1) not in d_loose
     assert pff_dag.Task("neg_gen", -1, 1) in d_strict
+
+
+# ---------------------------------------------------------------------------
+# Double-buffered hand-off targets (what the executor prefetches)
+# ---------------------------------------------------------------------------
+
+def test_handoff_targets_all_layers_next_chapter_node():
+    """all_layers: layer k's full state is consumed by the NEXT
+    chapter's node; there are no within-chapter cross-node consumers."""
+    nxt, params = pff_dag.handoff_targets(
+        "all_layers", 4, n_layers=3, splits=4, layer=1, chapter=1,
+        has_head=True, has_neg=True)
+    assert nxt == 2 and params == []
+    # last chapter: nothing left to hand off
+    nxt, params = pff_dag.handoff_targets(
+        "all_layers", 4, n_layers=3, splits=4, layer=1, chapter=3)
+    assert nxt is None and params == []
+
+
+def test_handoff_targets_single_layer_param_fanout():
+    """single_layer: layer k stays on node k across chapters (no state
+    hand-off) but its params fan out to every later layer's forward
+    recompute plus the head and neg_gen nodes."""
+    nxt, params = pff_dag.handoff_targets(
+        "single_layer", 4, n_layers=4, splits=3, layer=0, chapter=1,
+        has_head=True, has_neg=True)
+    assert nxt is None          # node 0 trains layer 0 every chapter
+    assert params == [1, 2, 3]  # recompute by 1,2; head on 3; neg on 3
+    # the last layer's params go only to head/neg (both node 3 == src)
+    nxt, params = pff_dag.handoff_targets(
+        "single_layer", 4, n_layers=4, splits=3, layer=3, chapter=1,
+        has_head=True, has_neg=True)
+    assert nxt is None and params == []
+
+
+def test_handoff_targets_sequential_is_empty():
+    nxt, params = pff_dag.handoff_targets(
+        "sequential", 1, n_layers=3, splits=4, layer=0, chapter=0,
+        has_head=True, has_neg=True)
+    assert nxt is None and params == []
+
+
+def test_chapter_train_nodes():
+    assert pff_dag.chapter_train_nodes("all_layers", 4, 3, chapter=6) \
+        == [2]
+    assert pff_dag.chapter_train_nodes("single_layer", 2, 3, chapter=0) \
+        == [0, 1]
+    assert pff_dag.chapter_train_nodes("sequential", 1, 3, chapter=5) \
+        == [0]
+
+
+def test_executor_overlap_off_single_device_bit_exact():
+    """overlap=False must reproduce the same stream in-process too (the
+    multi-node on/off A-B runs in the subprocess matrix)."""
+    import jax.numpy as jnp
+    from repro import api, data as data_lib
+    from repro.configs.ff_mlp import FFMLPConfig
+
+    task = data_lib.mnist_like(n_train=200, n_test=50)
+    cfg = FFMLPConfig(layer_sizes=(784, 64), epochs=2, splits=2,
+                      neg_mode="random", classifier="goodness",
+                      batch_size=64, seed=0)
+    on = api.fit(cfg, task, backend="executor", schedule="sequential",
+                 num_nodes=1)
+    off = api.fit(cfg, task, backend="executor", schedule="sequential",
+                  num_nodes=1, overlap=False)
+    for lp_on, lp_off in zip(on.params["layers"], off.params["layers"]):
+        assert bool(jnp.array_equal(lp_on["w"], lp_off["w"]))
+        assert bool(jnp.array_equal(lp_on["b"], lp_off["b"]))
+    assert off.raw.handoff["prefetch_issued"] == 0

@@ -2,7 +2,6 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro import data as data_lib, sharding
 from repro.core import train as train_lib
