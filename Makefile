@@ -1,6 +1,6 @@
 PY := PYTHONPATH=src python
 
-.PHONY: test lint bench bench-smoke pff-exec-smoke api-smoke
+.PHONY: test lint bench bench-smoke pff-exec-smoke fault-smoke api-smoke
 
 test:
 	$(PY) -m pytest -q
@@ -31,8 +31,18 @@ pff-exec-smoke:
 	XLA_FLAGS=--xla_force_host_platform_device_count=4 \
 		$(PY) -m benchmarks.run --only=pff_exec
 
-# XLA_FLAGS: the pff_exec section needs 4 faked host devices (the other
-# sections are device-count agnostic; tier-1 is green at 1 and 4).
+# Executor resilience gate on 4 faked host devices: chapter-checkpoint
+# overhead, per-fault recovery cost (crash/delay/drop/corrupt/dead-node)
+# and subprocess kill-then-resume for each schedule — every recovery
+# path must reproduce the fault-free weight stream bit-exactly
+# (BENCH_pff_faults.json). Exits non-zero on divergence.
+fault-smoke:
+	XLA_FLAGS=--xla_force_host_platform_device_count=4 \
+		$(PY) -m benchmarks.run --only=pff_faults
+
+# XLA_FLAGS: the pff_exec/pff_faults sections need 4 faked host devices
+# (the other sections are device-count agnostic; tier-1 is green at 1
+# and 4).
 bench:
 	XLA_FLAGS=--xla_force_host_platform_device_count=4 \
 		$(PY) -m benchmarks.run

@@ -25,7 +25,7 @@ ERR_BUDGET = 1e-4
 
 
 SECTIONS = ("tables", "lm", "lm_schedules", "lm_negatives", "kernels",
-            "roofline", "ff_hotloop", "pff_exec")
+            "roofline", "ff_hotloop", "pff_exec", "pff_faults")
 
 
 def main(argv):
@@ -105,6 +105,13 @@ def main(argv):
               "(multi-device) #####")
         from benchmarks import pff_exec as pexec_bench
         res = pexec_bench.run(quick=not full)
+        failures.extend(res["failures"])
+
+    if only in (None, "pff_faults"):
+        print("\n##### 7. Executor resilience: checkpoint overhead + "
+              "fault recovery (multi-device) #####")
+        from benchmarks import pff_faults
+        res = pff_faults.run(quick=not full)
         failures.extend(res["failures"])
 
     print(f"\nbenchmarks done in {time.time() - t0:.0f}s")

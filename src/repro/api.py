@@ -52,6 +52,9 @@ from typing import List, Optional
 
 from repro import data as data_lib
 from repro.core import pff, pff_exec, strategies
+from repro.core.faults import (              # re-exported resilience surface
+    FaultPlan, ResilienceConfig,
+)
 from repro.core.strategies import (          # re-exported registry surface
     classifier, goodness, negatives,
     register_classifier, register_goodness, register_negatives,
@@ -61,6 +64,7 @@ __all__ = [
     "fit", "simulate", "FitResult", "BACKENDS",
     "negatives", "goodness", "classifier",
     "register_negatives", "register_goodness", "register_classifier",
+    "FaultPlan", "ResilienceConfig",
 ]
 
 BACKENDS = ("sequential", "simulate", "executor", "federated", "pod")
@@ -87,6 +91,7 @@ class FitResult:
     utilization: Optional[float] = None
     sim: Optional[pff.SimResult] = None
     profile: Optional[dict] = None
+    resilience: Optional[dict] = None
     raw: object = None
 
 
@@ -105,8 +110,8 @@ def _validate_strategies(cfg):
 
 def fit(cfg, task=None, *, backend="sequential", schedule=None,
         num_nodes=1, probe_every=0, verbose=False, profile=False,
-        devices=None, overlap=True, comm_time=0.0, steps=40, batch=8,
-        seq=64, lr=1e-3) -> FitResult:
+        devices=None, overlap=True, resilience=None, resume_from=None,
+        comm_time=0.0, steps=40, batch=8, seq=64, lr=1e-3) -> FitResult:
     """Train ``cfg`` on ``task`` with the chosen backend. See the module
     docstring for the backend table.
 
@@ -121,6 +126,14 @@ def fit(cfg, task=None, *, backend="sequential", schedule=None,
     weight/negatives hand-off so transfers overlap compute (the
     default; False restores the serialize-on-demand hand-off for A/B
     runs — the weight stream is bit-identical either way).
+    resilience: executor backend — a ``repro.core.faults.
+    ResilienceConfig``: chapter-granular checkpointing, retry/backoff +
+    dead-node degradation, deterministic fault injection, and the
+    elastic federated ``membership`` callback. Stats come back on
+    ``FitResult.resilience``.
+    resume_from: executor backend — a chapter manifest (or its
+    directory) written by a previous resilient run; training replays
+    the DAG from the next chapter, bit-exactly.
     comm_time: simulate backend — per-DAG-edge cross-node hand-off cost.
     steps/batch/seq/lr: pod backend — pipeline run length and shapes
     (``task`` may be an iterable of token blocks, or None to use the
@@ -129,6 +142,12 @@ def fit(cfg, task=None, *, backend="sequential", schedule=None,
     if backend not in BACKENDS:
         raise ValueError(f"unknown backend {backend!r}; expected one of "
                          f"{BACKENDS}")
+    if (resilience is not None or resume_from is not None) \
+            and backend != "executor":
+        raise ValueError(
+            f"resilience/resume_from are executor-backend features "
+            f"(chapter checkpoints, fault injection, elastic "
+            f"membership); got backend={backend!r}")
     if backend == "pod":
         return _fit_pod(cfg, task, num_nodes=num_nodes, steps=steps,
                         batch=batch, seq=seq, lr=lr, verbose=verbose)
@@ -157,14 +176,16 @@ def fit(cfg, task=None, *, backend="sequential", schedule=None,
                             else "all_layers")
     if backend == "executor":
         ex = pff_exec.PFFExecutor(cfg, task, schedule, num_nodes,
-                                  devices=devices, overlap=overlap)
-        res = ex.run(profile=profile)
+                                  devices=devices, overlap=overlap,
+                                  resilience=resilience)
+        res = ex.run(profile=profile, resume_from=resume_from)
         return FitResult(backend=backend, cfg=cfg, params=res.params,
                          schedule=schedule, num_nodes=num_nodes,
                          records=res.records, test_acc=res.test_acc,
                          makespan=res.makespan,
                          profile=({"node_busy": res.node_busy}
                                   if profile else None),
+                         resilience=res.resilience,
                          raw=res)
 
     # backend == "simulate": canonical training once, then replay its

@@ -3,14 +3,28 @@
 Handles the framework's param/optimizer pytrees (nested dicts/tuples of
 arrays). Restore requires a template pytree (for structure + dtypes),
 which is how the launcher resumes: init abstract params, then load.
+
+Writes are atomic (tmp file + ``os.replace``), so a reader never sees a
+half-written archive — the property the PFF executor's chapter-granular
+manifests (``repro.core.pff_exec``) rely on to survive a hard kill
+between chapters. Those manifests also use the two extension points
+here: ``meta=`` (a JSON-serializable dict riding inside the archive,
+e.g. the completed chapter + schedule fingerprint) and ``strict=``
+restore (error on archive keys the template did not consume — a wrong
+or stale manifest fails loudly instead of silently dropping state).
 """
 from __future__ import annotations
 
+import json
 import os
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+# reserved archive keys (not pytree leaves)
+_STEP_KEY = "__step__"
+_META_KEY = "__meta__"
 
 
 def _flatten(tree):
@@ -26,10 +40,19 @@ def _flatten(tree):
     return flat
 
 
-def save(path, tree, step=None):
+def save(path, tree, step=None, meta=None):
+    """Atomically persist ``tree``; optionally a ``step`` int and a
+    JSON-serializable ``meta`` dict (read back via ``restore(...,
+    with_meta=True)``)."""
     flat = _flatten(tree)
+    if _STEP_KEY in flat or _META_KEY in flat:
+        raise ValueError(f"tree uses reserved key {_STEP_KEY}/{_META_KEY}")
     if step is not None:
-        flat["__step__"] = np.asarray(step)
+        flat[_STEP_KEY] = np.asarray(step)
+    if meta is not None:
+        # json.dumps raises on non-serializable meta — fail at save
+        # time, not at restore time
+        flat[_META_KEY] = np.asarray(json.dumps(meta))
     tmp = path + ".tmp"
     os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
     with open(tmp, "wb") as f:
@@ -37,23 +60,41 @@ def save(path, tree, step=None):
     os.replace(tmp, path)
 
 
-def restore(path, template):
-    """Returns (tree_like_template, step or None)."""
+def restore(path, template, *, strict=False, with_meta=False):
+    """Returns ``(tree_like_template, step or None)`` — or ``(tree,
+    step, meta or None)`` with ``with_meta=True``.
+
+    strict=True: raise if the archive holds keys the template did not
+    consume (default False keeps the historical lenient behavior of
+    ignoring extras — fine for partial restores, wrong for manifests).
+    """
     with np.load(path) as z:
         data = {k: z[k] for k in z.files}
-    step = data.pop("__step__", None)
+    step = data.pop(_STEP_KEY, None)
+    meta = data.pop(_META_KEY, None)
+    meta = json.loads(meta.item()) if meta is not None else None
     leaves_p = jax.tree_util.tree_flatten_with_path(template)
     paths, treedef = leaves_p[0], leaves_p[1]
     out = []
-    for path, leaf in paths:
+    consumed = set()
+    for path_, leaf in paths:
         key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
-                       for p in path)
+                       for p in path_)
         if key not in data:
             raise KeyError(f"checkpoint missing {key}")
+        consumed.add(key)
         arr = data[key]
         if tuple(arr.shape) != tuple(leaf.shape):
             raise ValueError(f"{key}: shape {arr.shape} != {leaf.shape}")
         # two-step conversion: numpy can't cast ml_dtypes (bf16) directly
         out.append(jnp.asarray(arr).astype(leaf.dtype))
-    return jax.tree_util.tree_unflatten(treedef, out), (
-        int(step) if step is not None else None)
+    if strict:
+        extra = sorted(set(data) - consumed)
+        if extra:
+            raise ValueError(
+                f"checkpoint holds {len(extra)} key(s) the template did "
+                f"not consume: {', '.join(extra[:5])}"
+                + ("..." if len(extra) > 5 else ""))
+    tree = jax.tree_util.tree_unflatten(treedef, out)
+    step = int(step) if step is not None else None
+    return (tree, step, meta) if with_meta else (tree, step)

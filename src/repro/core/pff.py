@@ -360,6 +360,175 @@ def run_federated_schedule(cfg, task: data_lib.ImageTask, num_nodes: int,
 
 
 # ---------------------------------------------------------------------------
+# Elastic Federated PFF: membership-aware rounds + weighted aggregation
+# ---------------------------------------------------------------------------
+
+def weighted_average_trees(trees, weights):
+    """Leaf-wise weighted average of pytrees — the federated round
+    aggregator. ``weights`` are python floats (normalized live-shard
+    fractions); accumulation walks ``trees`` in the given order, so two
+    callers passing the same trees in the same order get BIT-IDENTICAL
+    results (the elastic executor is checked against the sequential
+    reference this way). Integer/bool leaves (none today, but e.g. step
+    counters) must agree across trees and are taken from the first.
+    """
+    if len(trees) != len(weights) or not trees:
+        raise ValueError(f"{len(trees)} trees vs {len(weights)} weights")
+
+    def avg(*leaves):
+        if not jnp.issubdtype(jnp.asarray(leaves[0]).dtype, jnp.floating):
+            return leaves[0]
+        acc = leaves[0] * weights[0]
+        for leaf, w in zip(leaves[1:], weights[1:]):
+            acc = acc + leaf * w
+        return acc
+    return jax.tree_util.tree_map(avg, *trees)
+
+
+def elastic_node_round(good, cfg, states, head_state, acts, extras, lrs,
+                       lrs_head, key_node, *, epochs, impl, y=None,
+                       x_neutral=None, train_head=False):
+    """One node's shard-local work for one elastic round, starting from
+    (already copied/placed) round-start ``states``/``head_state``.
+
+    This is THE round math — the sequential reference
+    (``run_elastic_federated``) and the real executor's elastic driver
+    both call exactly this function, which is what makes the
+    multi-device aggregate bit-checkable against the single-device one.
+    NOTE: the chapter trainers donate their inputs — callers pass
+    per-node copies, never the round-start globals themselves.
+    """
+    out_states = []
+    for k, st in enumerate(states):
+        st = good.train_chapter(st, acts, extras, lrs,
+                                jax.random.fold_in(key_node, k),
+                                cfg=cfg, epochs=epochs)
+        out_states.append(st)
+        if k + 1 < len(states):
+            acts = tuple(ff_mlp.fwd_norm(st[0], a, impl=impl)
+                         for a in acts)
+    if train_head:
+        feats = ff_mlp.softmax_feats([s[0] for s in out_states],
+                                     x_neutral, impl=impl)
+        head, oph = ff_mlp.train_head_chapter(
+            head_state[0], head_state[1], feats, y, lrs_head,
+            jax.random.fold_in(key_node, 77), batch=cfg.batch_size,
+            epochs=epochs)
+        head_state = (head, oph)
+    return out_states, head_state
+
+
+def _check_membership(live, num_nodes, r):
+    live = sorted(set(int(n) for n in live))
+    if not live:
+        raise ValueError(f"membership callback returned no live nodes "
+                         f"for round {r}")
+    bad = [n for n in live if not 0 <= n < num_nodes]
+    if bad:
+        raise ValueError(f"membership round {r}: node ids {bad} outside "
+                         f"[0, {num_nodes})")
+    return live
+
+
+def run_elastic_federated(cfg, task: data_lib.ImageTask, num_nodes: int,
+                          membership) -> TrainResult:
+    """Sequential reference for ELASTIC Federated PFF (the executor's
+    ``resilience.membership`` mode is bit-checked against this).
+
+    Per round r (= one chapter's worth of work, cfg.splits rounds):
+    ``membership(r)`` names the live nodes; each live node trains a COPY
+    of the round-start model on ITS OWN shard for C mini-epochs
+    (shard-local training — the property the paper's federated schedule
+    already has), and the aggregator replaces the global model with the
+    live results averaged by live shard sizes
+    (``weighted_average_trees``). Nodes joining or leaving between
+    rounds therefore change only which shards contribute and their
+    weights — no global state is ever stranded on an absent node.
+
+    Key-only negative strategies only: score-needing (AdaptiveNEG)
+    regeneration reads the full global model, which does not exist
+    mid-round on any single node.
+    """
+    good = strategies.goodness.get(cfg.goodness_fn)
+    neg = strategies.negatives.get(cfg.neg_mode)
+    cls = strategies.classifier.get(cfg.classifier)
+    if good.uses_negatives and neg.regenerates and neg.needs_scores:
+        raise ValueError(
+            f"elastic federated membership supports key-only negative "
+            f"strategies; {cfg.neg_mode!r} needs full-model scores")
+    key = jax.random.PRNGKey(cfg.seed)
+    kneg = jax.random.fold_in(key, 999)
+    params = ff_mlp.init(key, cfg)
+    opt = ff_mlp.opt_init(params)
+    S = cfg.splits
+    C = max(cfg.epochs // cfg.splits, 1)
+    n_layers = len(params["layers"])
+    impl = ff_mlp.kernel_impl(cfg)
+    x_all = jnp.asarray(task.x_train)
+    y_all = jnp.asarray(task.y_train)
+    shards = [jnp.asarray(s)
+              for s in federated_shards(cfg, task, num_nodes)]
+    train_head = cls.trains_head
+
+    if good.uses_negatives:
+        xp0 = ff_mlp._norm(ff.overlay_label(x_all, y_all, cfg.num_classes))
+        xn0 = ff_mlp._norm(neg.fn(kneg, cfg, None, x_all, y_all, None))
+    else:
+        xk0 = ff_mlp._norm(ff.overlay_neutral(x_all, cfg.num_classes))
+    if train_head or not good.uses_negatives:
+        x_neutral = ff.overlay_neutral(x_all, cfg.num_classes)
+
+    states = [good.get_state(params, opt, k) for k in range(n_layers)]
+    head_state = (params["head"], opt["head"])
+    history = []
+    for r in range(S):
+        live = _check_membership(membership(r), num_nodes, r)
+        history.append((r, len(live)))
+        lrs = jnp.asarray([
+            optim.cooldown_lr(cfg.lr_ff, r * C + e, cfg.epochs,
+                              cfg.cooldown_after) for e in range(C)],
+            jnp.float32)
+        lrs_head = lrs * (cfg.lr_softmax / cfg.lr_ff)
+        kr = jax.random.fold_in(key, r)
+        if good.uses_negatives and neg.regenerates and r > 0:
+            xn0 = ff_mlp._norm(neg.fn(jax.random.fold_in(kneg, r - 1),
+                                      cfg, None, x_all, y_all, None))
+        per_node = {}
+        for node in live:
+            idx = shards[node]
+            if good.uses_negatives:
+                acts, extras = (xp0[idx], xn0[idx]), ()
+            else:
+                acts, extras = (xk0[idx],), (y_all[idx],)
+            placed = [jax.tree_util.tree_map(jnp.copy, st)
+                      for st in states]
+            placed_head = jax.tree_util.tree_map(jnp.copy, head_state)
+            per_node[node] = elastic_node_round(
+                good, cfg, placed, placed_head, acts, extras, lrs,
+                lrs_head, jax.random.fold_in(kr, node), epochs=C,
+                impl=impl, y=y_all[idx] if train_head else None,
+                x_neutral=x_neutral[idx] if train_head else None,
+                train_head=train_head)
+        total = float(sum(len(shards[n]) for n in live))
+        w = [len(shards[n]) / total for n in live]
+        states = [weighted_average_trees(
+            [per_node[n][0][k] for n in live], w)
+            for k in range(n_layers)]
+        if train_head:
+            head_state = weighted_average_trees(
+                [per_node[n][1] for n in live], w)
+
+    final = {**good.export(states), "head": head_state[0]}
+    mode = good.eval_mode(cfg)
+    test_acc = ff_mlp.accuracy(final, task.x_test, task.y_test,
+                               cfg.num_classes, mode, impl=impl)
+    train_acc = ff_mlp.accuracy(final, task.x_train[:2000],
+                                task.y_train[:2000], cfg.num_classes,
+                                mode, impl=impl)
+    return TrainResult(final, [], test_acc, train_acc, cfg, history)
+
+
+# ---------------------------------------------------------------------------
 # Deprecated entry points — the supported surface is ``repro.api.fit``
 # ---------------------------------------------------------------------------
 

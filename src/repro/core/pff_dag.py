@@ -156,6 +156,43 @@ def build_tasks(n_layers: int, splits: int, *, has_head: bool = False,
     return tasks
 
 
+def replay_frontier(n_layers: int, splits: int, start_chapter: int, *,
+                    has_head: bool = False, has_neg: bool = False,
+                    strict_neg: bool = False,
+                    has_local_heads: bool = False) -> List[Task]:
+    """The tasks a resumed executor must (re)execute when every chapter
+    < ``start_chapter`` has completed — i.e. the DAG restricted to
+    chapters >= ``start_chapter``, in canonical order.
+
+    FF's core property makes this cut well-defined: every dependency
+    edge points backward by at most one chapter (there are NO backward
+    edges at all — the reason a chapter checkpoint is a consistent
+    recovery line, unlike a mid-step backprop snapshot). This helper
+    VERIFIES that closure — every dep of a frontier task either belongs
+    to a completed chapter or precedes it inside the frontier — so a
+    resume from a bad chapter index fails loudly instead of replaying
+    an inconsistent stream.
+    """
+    if not 0 <= start_chapter <= splits:
+        raise ValueError(f"start_chapter {start_chapter} outside "
+                         f"[0, {splits}]")
+    frontier = [t for t in build_tasks(n_layers, splits,
+                                       has_head=has_head, has_neg=has_neg,
+                                       has_local_heads=has_local_heads)
+                if t.chapter >= start_chapter]
+    seen: set = set()
+    for t in frontier:
+        for d in deps(t, n_layers, has_head=has_head, has_neg=has_neg,
+                      strict_neg=strict_neg,
+                      has_local_heads=has_local_heads):
+            if d.chapter >= start_chapter and d not in seen:
+                raise ValueError(
+                    f"chapter {start_chapter} is not a valid replay "
+                    f"frontier: {t} depends on unexecuted {d}")
+        seen.add(t)
+    return frontier
+
+
 def deps(task: Task, n_layers: int, *, has_head: bool = False,
          has_neg: bool = False, strict_neg: bool = False,
          has_local_heads: bool = False) -> List[Task]:

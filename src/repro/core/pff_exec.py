@@ -65,17 +65,46 @@ per-layer dependent of the train task in the DAG
 node, and the executor dispatches it FUSED with its train task (the
 §4.4 objective is one two-layer-deep backprop call), which preserves
 the DAG order and the bit-exactness oracle.
+
+Resilience (``faults.ResilienceConfig`` via ``api.fit(...,
+resilience=...)``): because the DAG has no backward edges, a completed
+chapter is a CONSISTENT recovery line (``pff_dag.replay_frontier``) —
+the executor exploits that four ways. (1) chapter-granular
+checkpointing: after chapter c an atomic manifest (node states + head +
+published negatives + hand-off versions, ``repro.checkpoint`` with
+``meta``/``strict``) lands in ``checkpoint_dir``; ``run(resume_from=
+...)`` replays from the last completed chapter BIT-EXACTLY — the
+kill-then-resume gates in ``tests/test_pff_faults.py`` and
+``benchmarks/pff_faults.py`` prove the resumed weight stream equals the
+uninterrupted one. (2) retry with exponential backoff: an injected
+crash (``faults.FaultPlan`` — deterministic, schedule-addressable)
+fires at task ENTRY, before the hand-off take / buffer donation, so a
+retry re-dispatches the identical task. (3) graceful degradation: on
+budget exhaustion the node is declared dead — all_layers/single_layer
+remap its logical node to a surviving device (same math, still
+bit-exact); federated rolls the chapter back and drops the dead node's
+shard for that round. (4) elastic federated membership: a
+``membership(round)`` callback names the live nodes each round; every
+live node trains a COPY of the round-start model on its own shard and
+the aggregator averages weighted by live shard sizes — bit-checked
+against the sequential reference ``pff.run_elastic_federated`` (both
+call ``pff.elastic_node_round``). ``ExecResult.resilience`` reports
+retries, reassignments, checkpoint/restore cost and faults injected.
 """
 from __future__ import annotations
 
 import dataclasses
+import glob
+import os
+import re
 import time
 from typing import Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
-from repro import data as data_lib, optim
+from repro import checkpoint as checkpoint_lib, data as data_lib, optim
+from repro.core import faults as faults_lib
 from repro.core import ff, ff_mlp, pff, pff_dag, strategies
 from repro.launch import mesh as mesh_lib
 
@@ -90,6 +119,31 @@ class ExecResult:
     records: Optional[List[pff.TaskRecord]]  # per-task durations (profile)
     node_busy: Optional[List[float]]         # per-node busy seconds (profile)
     handoff: Optional[dict] = None           # transfer-slot counters
+    resilience: Optional[dict] = None        # retry/checkpoint/fault stats
+
+
+class _ShardDropped(Exception):
+    """Raised inside a federated chapter when its owning node dies with
+    the retry budget exhausted — the run loop rolls the chapter back and
+    drops that node's shard for the round (graceful degradation)."""
+
+    def __init__(self, node):
+        super().__init__(f"node {node} dead; shard dropped this round")
+        self.node = node
+
+
+def checkpoint_path(directory: str, chapter: int) -> str:
+    """Canonical chapter-manifest filename."""
+    return os.path.join(directory, f"pff_chapter_{chapter:04d}.npz")
+
+
+def latest_checkpoint(directory: str) -> Optional[str]:
+    """Newest (highest-chapter) manifest in ``directory``, or None."""
+    paths = glob.glob(os.path.join(directory, "pff_chapter_*.npz"))
+    if not paths:
+        return None
+    return max(paths, key=lambda p: int(
+        re.search(r"pff_chapter_(\d+)\.npz$", p).group(1)))
 
 
 class _Handoff:
@@ -111,20 +165,49 @@ class _Handoff:
     into ``pulls_cross`` (a real inter-node transfer on the consumer's
     critical path — what double-buffering exists to hide) vs
     ``pulls_local`` (same-device no-ops).
+
+    Fault hooks (``fault_cb`` — ``faults.FaultPlan.handoff_action``):
+    a "drop" fault loses the transfer (the slot is never parked — the
+    consumer's on-demand fallback IS the recovery path, so the weight
+    stream cannot change); a "corrupt" fault parks the copy with its
+    float leaves NaN-poisoned and the slot's integrity flag set,
+    modelling a checksum failure on receive. ``take`` deletes a
+    corrupt-flagged slot and re-pulls fresh bits instead of serving it
+    (``corrupt_detected``); serving the poisoned tree would NaN the
+    weights, so a regression here fails the bit-exactness oracle loudly.
     """
 
-    def __init__(self, devices, enabled: bool):
+    def __init__(self, devices, enabled: bool, fault_cb=None):
         self.devices = devices
         self.enabled = enabled
-        self.slots: Dict[tuple, tuple] = {}
+        self.fault_cb = fault_cb
+        self.slots: Dict[tuple, tuple] = {}   # (name, node) -> (ver, tree, corrupt)
         self.stats = {"prefetch_issued": 0, "prefetch_hits": 0,
-                      "pulls_cross": 0, "pulls_local": 0}
+                      "pulls_cross": 0, "pulls_local": 0,
+                      "prefetch_dropped": 0, "corrupt_injected": 0,
+                      "corrupt_detected": 0}
+
+    @staticmethod
+    def _poison(leaf):
+        if jnp.issubdtype(jnp.asarray(leaf).dtype, jnp.floating):
+            return jnp.full_like(leaf, jnp.nan)
+        return leaf
 
     def prefetch(self, name, node: int, version: int, tree):
         if not self.enabled:
             return
+        corrupt = False
+        if self.fault_cb is not None:
+            action = self.fault_cb(name, node, version)
+            if action == "drop":
+                self.stats["prefetch_dropped"] += 1
+                return
+            if action == "corrupt":
+                tree = jax.tree_util.tree_map(self._poison, tree)
+                self.stats["corrupt_injected"] += 1
+                corrupt = True
         self.slots[(name, node)] = (
-            version, jax.device_put(tree, self.devices[node]))
+            version, jax.device_put(tree, self.devices[node]), corrupt)
         self.stats["prefetch_issued"] += 1
 
     def _on_device(self, tree, dev) -> bool:
@@ -138,14 +221,24 @@ class _Handoff:
              pop: bool = False):
         slot = self.slots.get((name, node))
         if slot is not None and slot[0] == version:
-            if pop:
+            if slot[2]:
+                # integrity gate: poisoned bits are never served
                 del self.slots[(name, node)]
-            self.stats["prefetch_hits"] += 1
-            return slot[1]
+                self.stats["corrupt_detected"] += 1
+            else:
+                if pop:
+                    del self.slots[(name, node)]
+                self.stats["prefetch_hits"] += 1
+                return slot[1]
         dev = self.devices[node]
         self.stats["pulls_local" if self._on_device(tree, dev)
                    else "pulls_cross"] += 1
         return jax.device_put(tree, dev)
+
+    def drop_node_slots(self, node: int):
+        """Forget parked copies destined for a dead node's device."""
+        for key in [k for k in self.slots if k[1] == node]:
+            del self.slots[key]
 
 
 class PFFExecutor:
@@ -157,7 +250,8 @@ class PFFExecutor:
     """
 
     def __init__(self, cfg, task: data_lib.ImageTask, schedule: str,
-                 num_nodes: int, *, devices=None, overlap: bool = True):
+                 num_nodes: int, *, devices=None, overlap: bool = True,
+                 resilience: Optional[faults_lib.ResilienceConfig] = None):
         if schedule not in pff_dag.SCHEDULES:
             raise ValueError(f"unknown schedule {schedule!r}; expected "
                              f"one of {pff_dag.SCHEDULES}")
@@ -170,6 +264,7 @@ class PFFExecutor:
         self.overlap = overlap
         self.devices = (list(devices)[:num_nodes] if devices is not None
                         else mesh_lib.pff_node_devices(num_nodes))
+        self._devices_init = list(self.devices)   # undo dead-node remaps
         self.n_layers = len(cfg.layer_sizes) - 1
         self.C = max(cfg.epochs // cfg.splits, 1)
         self.impl = ff_mlp.kernel_impl(cfg)
@@ -178,6 +273,18 @@ class PFFExecutor:
         self.cls = strategies.classifier.get(cfg.classifier)
         self.has_head = self.cls.trains_head
         self.has_neg = self.good.uses_negatives and self.neg.regenerates
+        self.resilience = resilience
+        if resilience is not None and resilience.membership is not None:
+            if schedule != "federated":
+                raise ValueError(
+                    "elastic membership is a Federated-PFF mode; got "
+                    f"schedule={schedule!r}")
+            if self.has_neg and self.neg.needs_scores:
+                raise ValueError(
+                    f"elastic federated membership supports key-only "
+                    f"negative strategies; {cfg.neg_mode!r} needs "
+                    f"full-model scores")
+        self._const_dirty = False
         self._setup_constants()
 
     # ---- per-device constants (replicated once, before any timing) -------
@@ -294,8 +401,210 @@ class PFFExecutor:
         self._records.append(pff.TaskRecord(kind, layer, chapter, dt))
         self._busy[node] += dt
 
+    # ---- resilience: fault consult, retry/backoff, death, checkpoints ----
+    @property
+    def _fault_plan(self):
+        return (self.resilience.fault_plan
+                if self.resilience is not None else None)
+
+    def _resilient(self, kind, layer, chapter, node, body):
+        """Run one task body under the resilience policy.
+
+        Injected crashes fire at task ENTRY — before the hand-off take
+        and therefore before any buffer donation or state mutation — so
+        a retry re-dispatches the IDENTICAL task and the weight stream
+        stays bit-exact. Only ``faults.InjectedFault`` is caught; real
+        errors still propagate. On budget exhaustion the node is
+        declared dead and the loop continues: the crash check skips dead
+        nodes, so the body then runs on the reassigned device
+        (all_layers / single_layer) — federated instead aborts the
+        chapter via ``_ShardDropped`` (the caller rolls it back).
+        """
+        rc, plan = self.resilience, self._fault_plan
+        if plan is not None and node not in self._dead:
+            d = plan.delay_s(kind, layer, chapter, node)
+            if d > 0:
+                time.sleep(d)
+        attempt = 0
+        while True:
+            try:
+                if (plan is not None and node not in self._dead
+                        and plan.should_crash(kind, layer, chapter, node)):
+                    raise faults_lib.InjectedFault(
+                        f"injected crash: {kind}(layer={layer}, "
+                        f"chapter={chapter}) on node {node}")
+                return body()
+            except faults_lib.InjectedFault:
+                t0 = time.perf_counter()
+                if attempt < rc.max_retries:
+                    time.sleep(rc.backoff_base_s
+                               * rc.backoff_factor ** attempt)
+                    attempt += 1
+                    self._rstats["retries"] += 1
+                    self._rstats["recovery_time_s"] += (
+                        time.perf_counter() - t0)
+                    continue
+                self._declare_dead(node)
+                self._rstats["recovery_time_s"] += time.perf_counter() - t0
+                if self.schedule == "federated":
+                    raise _ShardDropped(node) from None
+
+    def _declare_dead(self, node):
+        """Retry budget exhausted: graceful degradation.
+
+        all_layers / single_layer: remap the LOGICAL node to a surviving
+        device (``self.devices`` is mutated in place — the hand-off
+        shares the list) and re-place its replicated constants; the
+        DAG's node assignments are untouched, so the same tasks run the
+        same math on the new device — still bit-exact. What this models
+        is scheduling-level task reassignment (state travels through
+        the same hand-off/pull path as before). federated: no remap —
+        the dead node's shard simply stops contributing.
+        """
+        self._dead.add(node)
+        self._rstats["dead_nodes"].append(node)
+        if self.schedule == "federated":
+            self._rstats["shards_dropped"] += 1
+            return
+        live = [n for n in range(self.num_nodes) if n not in self._dead]
+        if not live:
+            raise RuntimeError("resilience: every node is dead")
+        new_dev = self.devices[live[0]]
+        self.devices[node] = new_dev
+        self._const[node] = jax.device_put(self._const[node], new_dev)
+        self._handoff.drop_node_slots(node)
+        self._const_dirty = True
+        self._rstats["reassignments"] += 1
+
+    def _maybe_kill(self, chapter, phase):
+        plan = self._fault_plan
+        if plan is not None and plan.kill_now(chapter, phase):
+            # a HARD kill — no cleanup, no atexit — so the kill-then-
+            # resume tests exercise real crash recovery. Sync first so
+            # the pre-kill checkpoint (phase="post") is really on disk.
+            jax.block_until_ready([s[0] for s in self._states])
+            print(f"[pff_exec] injected kill at chapter {chapter} "
+                  f"({phase})", flush=True)
+            os._exit(faults_lib.KILL_EXIT)
+
+    # ---- chapter-granular checkpoint / resume ----------------------------
+    def _ckpt_has_neg(self):
+        """Published negatives are part of the recovery line only for
+        score-needing strategies — key-only ones regenerate from the
+        PRNG, so persisting them would be dead weight."""
+        return self.has_neg and self.neg.needs_scores
+
+    def _ckpt_template(self):
+        """Restore template derived purely from the config — a resumed
+        process can rebuild it without reading the manifest first."""
+        cfg = self.cfg
+        params = ff_mlp.init(jax.random.PRNGKey(cfg.seed), cfg)
+        opt = ff_mlp.opt_init(params)
+        template = {"states": [self.good.get_state(params, opt, k)
+                               for k in range(self.n_layers)],
+                    "head": (params["head"], opt["head"])}
+        if self._ckpt_has_neg():
+            x = jnp.asarray(self.task.x_train)
+            template["neg"] = jax.ShapeDtypeStruct(x.shape, jnp.float32)
+        return template
+
+    def _write_checkpoint(self, chapter):
+        rc = self.resilience
+        if rc is None or rc.checkpoint_dir is None:
+            return
+        last = chapter == self.cfg.splits - 1
+        if (chapter + 1) % rc.checkpoint_every != 0 and not last:
+            return
+        cfg = self.cfg
+        t0 = time.perf_counter()
+        tree = {"states": list(self._states), "head": self._head}
+        if self._ckpt_has_neg():
+            tree["neg"] = self._neg[1]
+        meta = {"chapter": chapter, "schedule": self.schedule,
+                "num_nodes": self.num_nodes, "splits": cfg.splits,
+                "seed": cfg.seed, "goodness_fn": cfg.goodness_fn,
+                "neg_mode": cfg.neg_mode, "classifier": cfg.classifier,
+                "layer_sizes": list(cfg.layer_sizes),
+                "neg_chapter": self._neg[0],
+                "ver": [int(v) for v in self._ver],
+                "head_ver": int(self._head_ver)}
+        # checkpoint.save syncs leaves to host — that device->host drain
+        # is the per-chapter overhead BENCH_pff_faults.json measures
+        checkpoint_lib.save(checkpoint_path(rc.checkpoint_dir, chapter),
+                            tree, step=chapter, meta=meta)
+        kept = sorted(glob.glob(os.path.join(rc.checkpoint_dir,
+                                             "pff_chapter_*.npz")))
+        for old in kept[:-rc.keep_last] if rc.keep_last > 0 else []:
+            os.remove(old)
+        self._rstats["checkpoints_written"] += 1
+        self._rstats["checkpoint_time_s"] += time.perf_counter() - t0
+
+    def _restore(self, resume_from):
+        """Load a chapter manifest and return its completed chapter."""
+        path = resume_from
+        if os.path.isdir(path):
+            path = latest_checkpoint(path)
+            if path is None:
+                raise FileNotFoundError(
+                    f"no pff_chapter_*.npz manifest in {resume_from!r}")
+        cfg = self.cfg
+        tree, _, meta = checkpoint_lib.restore(
+            path, self._ckpt_template(), strict=True, with_meta=True)
+        if meta is None:
+            raise ValueError(f"{path!r} carries no manifest meta — not a "
+                             f"PFF chapter checkpoint")
+        want = {"schedule": self.schedule, "num_nodes": self.num_nodes,
+                "splits": cfg.splits, "seed": cfg.seed,
+                "goodness_fn": cfg.goodness_fn, "neg_mode": cfg.neg_mode,
+                "classifier": cfg.classifier,
+                "layer_sizes": list(cfg.layer_sizes)}
+        for k, v in want.items():
+            if meta.get(k) != v:
+                raise ValueError(
+                    f"checkpoint {path!r} was written by a different run: "
+                    f"{k}={meta.get(k)!r} != {v!r}")
+        self._states = list(tree["states"])
+        self._head = tree["head"]
+        if self._ckpt_has_neg():
+            self._neg = (int(meta["neg_chapter"]), tree["neg"])
+        self._ver = [int(v) for v in meta["ver"]]
+        self._head_ver = int(meta["head_ver"])
+        return int(meta["chapter"])
+
     # ---- per-task bodies (each mirrors the sequential trainer) -----------
     def _train_task(self, k, chapter, node, acts, extras, lrs, kc, profile):
+        if self.resilience is None:
+            return self._train_task_body(k, chapter, node, acts, extras,
+                                         lrs, kc, profile)
+        out = self._resilient(
+            "train", k, chapter, node,
+            lambda: self._train_task_body(k, chapter, node, acts, extras,
+                                          lrs, kc, profile))
+        if k == 0:
+            # "mid-chapter" kill point: the chapter's first train task
+            # has completed but the chapter has not — resume must replay
+            # the partially-executed chapter from the previous manifest
+            self._maybe_kill(chapter, "mid")
+        return out
+
+    def _head_task(self, chapter, node, idx, lrs_head, kc, profile):
+        if self.resilience is None:
+            return self._head_task_body(chapter, node, idx, lrs_head, kc,
+                                        profile)
+        return self._resilient(
+            "head", self.n_layers, chapter, node,
+            lambda: self._head_task_body(chapter, node, idx, lrs_head,
+                                         kc, profile))
+
+    def _neg_task(self, chapter, node, profile):
+        if self.resilience is None:
+            return self._neg_task_body(chapter, node, profile)
+        return self._resilient(
+            "neg_gen", -1, chapter, node,
+            lambda: self._neg_task_body(chapter, node, profile))
+
+    def _train_task_body(self, k, chapter, node, acts, extras, lrs, kc,
+                         profile):
         """One chapter-train task via the goodness strategy. For
         Performance-Optimized goodness this call carries the layer's
         local_head task fused in (see module docstring); it records as
@@ -305,6 +614,13 @@ class PFFExecutor:
         the outgoing state is immediately published toward its DAG
         consumers."""
         t0 = time.perf_counter()
+        if self.resilience is not None:
+            # the driver computed acts/extras before this (possibly
+            # retried) dispatch — if the node was reassigned to a
+            # surviving device mid-retry they still live on the dead
+            # one, so re-place them (same-device no-op otherwise)
+            acts = jax.device_put(acts, self.devices[node])
+            extras = jax.device_put(extras, self.devices[node])
         state = self._handoff.take(("state", k), node, self._ver[k],
                                    self._states[k], pop=True)
         state = self.good.train_chapter(
@@ -317,7 +633,7 @@ class PFFExecutor:
                            state[0])
         return state[0]
 
-    def _head_task(self, chapter, node, idx, lrs_head, kc, profile):
+    def _head_task_body(self, chapter, node, idx, lrs_head, kc, profile):
         const = self._const[node]
         t0 = time.perf_counter()
         xn_all = (const["x_neutral"] if idx is None
@@ -345,7 +661,7 @@ class PFFExecutor:
         self._maybe_record(profile, node, "head", self.n_layers, chapter,
                            t0, head["w"])
 
-    def _neg_task(self, chapter, node, profile):
+    def _neg_task_body(self, chapter, node, profile):
         """Score-needing (AdaptiveNEG) regeneration from the full
         chapter-c model, published for the next chapter
         ("UpdateXNEG(publish=True)" — the DAG's strict_neg gating,
@@ -383,6 +699,11 @@ class PFFExecutor:
             lp = self._train_task(k, chapter, node, acts, extras, lrs,
                                   kc, profile)
             if k + 1 < self.n_layers:
+                if self.resilience is not None:
+                    # a mid-chapter reassignment leaves this loop's acts
+                    # on the dead node's device while lp lands on the
+                    # surviving one — re-place (same-device no-op)
+                    acts = jax.device_put(acts, self.devices[node])
                 acts = tuple(self._fwd(lp, a) for a in acts)
         if self.has_head:
             self._head_task(chapter, node, idx, lrs_head, kc, profile)
@@ -418,12 +739,129 @@ class PFFExecutor:
                                                self.num_nodes,
                                                chapter=chapter), profile)
 
+    # ---- elastic federated rounds (resilience.membership) ----------------
+    def _run_round_elastic(self, r, profile):
+        """One elastic Federated-PFF round: every live node trains a
+        COPY of the round-start model on its own shard (concurrently —
+        the dispatches are async and land on distinct devices), then the
+        aggregator replaces the global model with the live results
+        averaged by live shard sizes. The per-node math and the
+        aggregation walk nodes in sorted order and go through
+        ``pff.elastic_node_round`` / ``pff.weighted_average_trees`` —
+        the EXACT calls of the sequential reference
+        ``pff.run_elastic_federated`` — so the multi-device round is
+        bit-identical to the single-device one."""
+        rc = self.resilience
+        live = [n for n in pff._check_membership(rc.membership(r),
+                                                 self.num_nodes, r)
+                if n not in self._dead]
+        if not live:
+            self._rstats["chapters_skipped"] += 1
+            self._rstats["elastic_rounds"].append(
+                {"round": r, "live": [], "weights": []})
+            return
+        lrs, lrs_head = self._lrs(r)
+        kr = jax.random.fold_in(self.key, r)
+        # place per-node copies FIRST: the chapter trainers donate their
+        # buffers, and a same-device device_put aliases — without the
+        # copies node B's round would consume node A's donated input
+        placed = {}
+        for node in live:
+            dev = self.devices[node]
+            placed[node] = (
+                [jax.tree_util.tree_map(jnp.copy,
+                                        jax.device_put(s, dev))
+                 for s in self._states],
+                jax.tree_util.tree_map(jnp.copy,
+                                       jax.device_put(self._head, dev)))
+        per_node = {}
+        first_done = False
+        for node in live:
+            const = self._const[node]
+            idx = const["idx"]
+            acts, extras = self._chapter_inputs(r, node)
+            st0, head0 = placed[node]
+
+            def body(node=node, const=const, idx=idx, acts=acts,
+                     extras=extras, st0=st0, head0=head0):
+                t0 = time.perf_counter()
+                out = pff.elastic_node_round(
+                    self.good, self.cfg, st0, head0, acts, extras, lrs,
+                    lrs_head, jax.random.fold_in(kr, node),
+                    epochs=self.C, impl=self.impl,
+                    y=const["y"][idx] if self.has_head else None,
+                    x_neutral=(const["x_neutral"][idx]
+                               if self.has_head else None),
+                    train_head=self.has_head)
+                self._maybe_record(profile, node, "round", -1, r, t0,
+                                   out[0][0][0])
+                return out
+
+            try:
+                per_node[node] = self._resilient("round", -1, r, node,
+                                                 body)
+            except _ShardDropped:
+                continue
+            if not first_done:
+                first_done = True
+                self._maybe_kill(r, "mid")
+        ok = [n for n in live if n in per_node]
+        if not ok:
+            self._rstats["chapters_skipped"] += 1
+            self._rstats["elastic_rounds"].append(
+                {"round": r, "live": [], "weights": []})
+            return
+        total = float(sum(int(self._const[n]["idx"].shape[0])
+                          for n in ok))
+        w = [int(self._const[n]["idx"].shape[0]) / total for n in ok]
+        dev0 = self.devices[0]
+        self._states = [pff.weighted_average_trees(
+            [jax.device_put(per_node[n][0][k], dev0) for n in ok], w)
+            for k in range(self.n_layers)]
+        self._ver = [r] * self.n_layers
+        if self.has_head:
+            self._head = pff.weighted_average_trees(
+                [jax.device_put(per_node[n][1], dev0) for n in ok], w)
+            self._head_ver = r
+        self._rstats["elastic_rounds"].append(
+            {"round": r, "live": ok, "weights": w})
+
     # ---- entry point -----------------------------------------------------
-    def run(self, *, profile: bool = False) -> ExecResult:
+    def _fresh_rstats(self):
+        return {"retries": 0, "reassignments": 0, "dead_nodes": [],
+                "checkpoints_written": 0, "checkpoint_time_s": 0.0,
+                "restore_time_s": 0.0, "resumed_from_chapter": None,
+                "recovery_time_s": 0.0, "faults_injected": {},
+                "shards_dropped": 0, "chapters_skipped": 0,
+                "elastic_rounds": None}
+
+    def run(self, *, profile: bool = False,
+            resume_from: Optional[str] = None) -> ExecResult:
         """Executes the schedule once. ``profile=True`` blocks after
         every task to collect per-task ``TaskRecord``s (destroys the
-        overlap, so use a separate non-profiled run for makespan)."""
+        overlap, so use a separate non-profiled run for makespan).
+
+        resume_from: a chapter manifest written by a previous run (or
+        its directory — the newest manifest is used); training replays
+        the DAG from the first chapter after it, bit-exactly (the
+        restore cost rides the timed window, like initial placement).
+        """
         cfg = self.cfg
+        rc = self.resilience
+        plan = self._fault_plan
+        if plan is not None:
+            plan.reset()
+        # undo a previous run's dead-node remapping (benchmarks reuse
+        # the executor for warm-cache timing)
+        self.devices[:] = self._devices_init
+        if self._const_dirty:
+            self._setup_constants()
+            self._const_dirty = False
+        self._dead: set = set()
+        self._rstats = self._fresh_rstats()
+        elastic = rc is not None and rc.membership is not None
+        if elastic:
+            self._rstats["elastic_rounds"] = []
         params = ff_mlp.init(jax.random.PRNGKey(cfg.seed), cfg)
         opt = ff_mlp.opt_init(params)
         self._records: List[pff.TaskRecord] = []
@@ -431,7 +869,9 @@ class PFFExecutor:
         self._neg: Tuple[int, object] = (-1, None)
         self._ver = [-1] * self.n_layers       # chapter of last train(k)
         self._head_ver = -1
-        self._handoff = _Handoff(self.devices, self.overlap)
+        self._handoff = _Handoff(
+            self.devices, self.overlap,
+            fault_cb=plan.handoff_action if plan is not None else None)
 
         t_start = time.perf_counter()
         # initial placement rides the timed window: it is part of the
@@ -439,11 +879,50 @@ class PFFExecutor:
         self._states = [self.good.get_state(params, opt, k)
                         for k in range(self.n_layers)]
         self._head = (params["head"], opt["head"])
-        for chapter in range(cfg.splits):
-            if self.schedule == "single_layer":
+        start_chapter = 0
+        if resume_from is not None:
+            t0 = time.perf_counter()
+            done = self._restore(resume_from)
+            start_chapter = done + 1
+            # sanity: the resume point must be a closed cut of the DAG
+            pff_dag.replay_frontier(
+                self.n_layers, cfg.splits, start_chapter,
+                has_head=self.has_head, has_neg=self._ckpt_has_neg(),
+                strict_neg=self._ckpt_has_neg())
+            self._rstats["resumed_from_chapter"] = done
+            self._rstats["restore_time_s"] = time.perf_counter() - t0
+        for chapter in range(start_chapter, cfg.splits):
+            if elastic:
+                self._run_round_elastic(chapter, profile)
+            elif self.schedule == "single_layer":
                 self._run_chapter_single_layer(chapter, profile)
+            elif (self.schedule == "federated" and self._dead
+                  and pff_dag.node_of(self.schedule, self.num_nodes,
+                                      layer=0, chapter=chapter)
+                  in self._dead):
+                # the owning node died in an earlier chapter — its shard
+                # no longer contributes (the model rests this round)
+                self._rstats["chapters_skipped"] += 1
+            elif self.schedule == "federated" and plan is not None:
+                # a mid-chapter death must not leave a half-trained
+                # chapter: snapshot the recovery line (copies — the
+                # chapter trainers donate the live buffers) and roll
+                # back on _ShardDropped
+                snap = jax.tree_util.tree_map(
+                    jnp.copy, (list(self._states), self._head))
+                snap_meta = (list(self._ver), self._head_ver, self._neg)
+                try:
+                    self._run_chapter_owned(chapter, profile)
+                except _ShardDropped:
+                    self._states, self._head = list(snap[0]), snap[1]
+                    self._ver, self._head_ver, self._neg = (
+                        list(snap_meta[0]), snap_meta[1], snap_meta[2])
+                    self._rstats["chapters_skipped"] += 1
             else:
                 self._run_chapter_owned(chapter, profile)
+            self._write_checkpoint(chapter)
+            if rc is not None:
+                self._maybe_kill(chapter, "post")
         outs = [s[0] for s in self._states] + [self._head[0]]
         if self._neg[1] is not None:
             outs.append(self._neg[1])
@@ -455,10 +934,15 @@ class PFFExecutor:
         acc = ff_mlp.accuracy(final, self.task.x_test, self.task.y_test,
                               cfg.num_classes, self.good.eval_mode(cfg),
                               impl=self.impl)
+        res_stats = None
+        if rc is not None or resume_from is not None:
+            res_stats = dict(self._rstats)
+            res_stats["faults_injected"] = (dict(plan.fired)
+                                            if plan is not None else {})
         return ExecResult(final, self.schedule, self.num_nodes, makespan,
                           acc, self._records if profile else None,
                           list(self._busy) if profile else None,
-                          dict(self._handoff.stats))
+                          dict(self._handoff.stats), res_stats)
 
 
 def run_pff_exec(cfg, task, schedule, num_nodes, *, devices=None,
@@ -504,6 +988,20 @@ def params_bit_equal(a, b, *, with_head=False, with_local_heads=False):
 # path through benchmarks/pff_exec.py).
 # ---------------------------------------------------------------------------
 
+def _case_setup(splits, n_train, neg_mode, classifier, goodness_fn):
+    """The (cfg, task) every selftest case trains — shared by the
+    bit-exactness matrix and the resilience cases so a fault-injected
+    run is comparable against the same reference."""
+    from repro.configs.ff_mlp import FFMLPConfig
+
+    task = data_lib.mnist_like(n_train=n_train, n_test=200)
+    cfg = FFMLPConfig(layer_sizes=(784, 128, 128), epochs=splits * 2,
+                      splits=splits, neg_mode=neg_mode,
+                      classifier=classifier, goodness_fn=goodness_fn,
+                      batch_size=64, seed=0)
+    return cfg, task
+
+
 def _check_case(schedule, nodes, splits, n_train, neg_mode, classifier,
                 goodness_fn="sumsq", *, check_sim_bound=False,
                 check_overlap_ab=False):
@@ -516,13 +1014,9 @@ def _check_case(schedule, nodes, splits, n_train, neg_mode, classifier,
     overlap-off weight streams to be bit-identical to each other (the
     prefetched copies must be the same bits as the on-demand pulls)."""
     from repro import api
-    from repro.configs.ff_mlp import FFMLPConfig
 
-    task = data_lib.mnist_like(n_train=n_train, n_test=200)
-    cfg = FFMLPConfig(layer_sizes=(784, 128, 128), epochs=splits * 2,
-                      splits=splits, neg_mode=neg_mode,
-                      classifier=classifier, goodness_fn=goodness_fn,
-                      batch_size=64, seed=0)
+    cfg, task = _case_setup(splits, n_train, neg_mode, classifier,
+                            goodness_fn)
     if schedule == "federated":
         ref = api.fit(cfg, task, backend="federated", num_nodes=nodes)
     else:
@@ -613,6 +1107,58 @@ _MATRIX = (
 _AB_CASES = (1, 3, 6)
 
 
+def _resilience_case(args):
+    """One resilience run from the CLI: inject ``--fault-plan``, write
+    chapter manifests into ``--checkpoint-dir``, resume from
+    ``--resume-from`` — and gate the surviving weight stream against the
+    fault-free reference with ``params_bit_equal`` wherever the policy
+    promises bit-exactness (everywhere except federated shard drops,
+    which degrade gracefully instead). A ``kill_*`` plan exits the
+    process with ``faults.KILL_EXIT`` before any comparison — the
+    caller re-invokes with ``--resume-from`` (what
+    ``benchmarks/pff_faults.py`` and the subprocess tests do)."""
+    from repro import api
+
+    cfg, task = _case_setup(args.splits, args.n_train, args.neg_mode,
+                            args.classifier, args.goodness_fn)
+    plan = None
+    if args.fault_plan:
+        plan = faults_lib.named_plan(
+            args.fault_plan, splits=cfg.splits,
+            n_layers=len(cfg.layer_sizes) - 1, num_nodes=args.nodes)
+    rc = faults_lib.ResilienceConfig(checkpoint_dir=args.checkpoint_dir,
+                                     fault_plan=plan)
+    res = api.fit(cfg, task, backend="executor", schedule=args.schedule,
+                  num_nodes=args.nodes, resilience=rc,
+                  resume_from=args.resume_from)
+    stats = res.raw.resilience
+    print(f"resilience {args.schedule} nodes={args.nodes} "
+          f"plan={args.fault_plan or '-'} "
+          f"resume={'yes' if args.resume_from else 'no'}: "
+          f"acc={res.test_acc:.4f} retries={stats['retries']} "
+          f"reassignments={stats['reassignments']} "
+          f"dead={stats['dead_nodes']} "
+          f"faults={stats['faults_injected']}")
+    degraded = stats["shards_dropped"] or stats["chapters_skipped"]
+    if degraded:
+        print("  federated shard-drop degradation: bit-exactness gate "
+              "skipped (weighted rounds lost a shard by design)")
+        return []
+    if args.schedule == "federated":
+        ref = api.fit(cfg, task, backend="federated",
+                      num_nodes=args.nodes)
+    else:
+        ref = api.fit(cfg, task, backend="sequential")
+    if not params_bit_equal(ref.params, res.params,
+                            with_head=args.classifier == "softmax",
+                            with_local_heads=args.goodness_fn
+                            == "perf_opt"):
+        return [f"{args.schedule}: resilient run diverged from the "
+                f"fault-free reference (plan={args.fault_plan})"]
+    print("  bit-exact vs fault-free reference")
+    return []
+
+
 def _selftest(argv=None):
     import argparse
 
@@ -634,10 +1180,24 @@ def _selftest(argv=None):
                    choices=list(strategies.classifier.names()))
     p.add_argument("--goodness-fn", default="sumsq",
                    choices=list(strategies.goodness.names()))
+    p.add_argument("--fault-plan", default=None,
+                   choices=sorted(faults_lib.NAMED_PLANS),
+                   help="inject a named deterministic fault plan "
+                        "(repro.core.faults.NAMED_PLANS) and gate the "
+                        "surviving weight stream")
+    p.add_argument("--checkpoint-dir", default=None,
+                   help="write chapter-granular manifests here (one "
+                        "atomic .npz per completed chapter)")
+    p.add_argument("--resume-from", default=None,
+                   help="chapter manifest (or its directory: newest "
+                        "wins) to resume from — replays the DAG from "
+                        "the next chapter bit-exactly")
     args = p.parse_args(argv)
 
     failures = []
-    if args.matrix:
+    if args.fault_plan or args.checkpoint_dir or args.resume_from:
+        failures = _resilience_case(args)
+    elif args.matrix:
         for i, case in enumerate(_MATRIX):
             failures += _check_case(*case, check_sim_bound=i == 0,
                                     check_overlap_ab=i in _AB_CASES)

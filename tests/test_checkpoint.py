@@ -1,0 +1,115 @@
+"""Direct tests for repro.checkpoint (previously only covered through
+the property suite): save/restore round-trip incl. the bf16 upcast
+path, __step__ handling, tmp-file atomicity, and the strict=/meta=
+behavior the PFF executor's chapter manifests rely on."""
+import os
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import checkpoint
+
+
+def _tree():
+    return {"layers": [{"w": jnp.arange(6, dtype=jnp.float32).reshape(2, 3),
+                        "b": jnp.ones((3,))}],
+            "state": (jnp.full((2, 2), 2.5), jnp.zeros((4,)))}
+
+
+def test_roundtrip_bit_exact(tmp_path):
+    import jax
+
+    path = str(tmp_path / "ck.npz")
+    tree = _tree()
+    checkpoint.save(path, tree, step=12)
+    restored, step = checkpoint.restore(path, tree)
+    assert step == 12
+    for a, b in zip(jax.tree_util.tree_leaves(tree),
+                    jax.tree_util.tree_leaves(restored)):
+        assert a.dtype == b.dtype
+        assert bool(jnp.array_equal(a, b))
+    # tuples restored as tuples, lists as lists (template treedef)
+    assert isinstance(restored["state"], tuple)
+    assert isinstance(restored["layers"], list)
+
+
+def test_step_none_roundtrip(tmp_path):
+    path = str(tmp_path / "ck.npz")
+    tree = {"w": jnp.ones((2,))}
+    checkpoint.save(path, tree)
+    _, step = checkpoint.restore(path, tree)
+    assert step is None
+
+
+def test_bf16_upcast_roundtrip(tmp_path):
+    """bf16 leaves are persisted as lossless f32 and cast back to the
+    template's dtype on restore."""
+    path = str(tmp_path / "ck.npz")
+    tree = {"w": jnp.asarray([1.5, -2.25, 3.0], jnp.bfloat16)}
+    checkpoint.save(path, tree, step=1)
+    restored, _ = checkpoint.restore(path, tree)
+    assert restored["w"].dtype == jnp.bfloat16
+    assert bool(jnp.array_equal(restored["w"], tree["w"]))
+    # the archive itself holds f32 (np can't represent bf16)
+    with np.load(path) as z:
+        assert z["w"].dtype == np.float32
+
+
+def test_atomic_no_tmp_left_behind(tmp_path):
+    path = str(tmp_path / "sub" / "ck.npz")
+    checkpoint.save(path, {"w": jnp.ones((2,))}, step=3)
+    assert os.path.exists(path)
+    assert not os.path.exists(path + ".tmp")
+    assert os.listdir(os.path.dirname(path)) == ["ck.npz"]
+
+
+def test_missing_key_and_shape_mismatch(tmp_path):
+    path = str(tmp_path / "ck.npz")
+    checkpoint.save(path, {"w": jnp.ones((2,))})
+    with pytest.raises(KeyError, match="missing"):
+        checkpoint.restore(path, {"w": jnp.ones((2,)), "b": jnp.ones((1,))})
+    with pytest.raises(ValueError, match="shape"):
+        checkpoint.restore(path, {"w": jnp.ones((3,))})
+
+
+def test_strict_rejects_unconsumed_keys(tmp_path):
+    path = str(tmp_path / "ck.npz")
+    full = {"w": jnp.ones((2,)), "extra": jnp.zeros((1,))}
+    checkpoint.save(path, full, step=5)
+    sub = {"w": jnp.ones((2,))}
+    # lenient (default): extras silently ignored — historical behavior
+    restored, step = checkpoint.restore(path, sub)
+    assert step == 5 and bool(jnp.array_equal(restored["w"], full["w"]))
+    # strict: unconsumed keys are an error naming the leftovers
+    with pytest.raises(ValueError, match="extra"):
+        checkpoint.restore(path, sub, strict=True)
+    # __step__/__meta__ never count as unconsumed
+    checkpoint.restore(path, full, strict=True)
+
+
+def test_meta_roundtrip(tmp_path):
+    path = str(tmp_path / "ck.npz")
+    meta = {"chapter": 3, "schedule": "all_layers", "ver": [3, 3],
+            "nested": {"ok": True}}
+    tree = {"w": jnp.ones((2,))}
+    checkpoint.save(path, tree, step=3, meta=meta)
+    restored, step, got = checkpoint.restore(path, tree, strict=True,
+                                             with_meta=True)
+    assert got == meta and step == 3
+    # without with_meta the historical 2-tuple signature is preserved
+    out = checkpoint.restore(path, tree)
+    assert len(out) == 2
+    # absent meta reads back as None
+    checkpoint.save(path, tree)
+    _, _, none_meta = checkpoint.restore(path, tree, with_meta=True)
+    assert none_meta is None
+
+
+def test_meta_must_be_json_serializable(tmp_path):
+    path = str(tmp_path / "ck.npz")
+    with pytest.raises(TypeError):
+        checkpoint.save(path, {"w": jnp.ones((2,))},
+                        meta={"bad": jnp.ones((2,))})
+    # the failed save must not leave a tmp file behind either
+    assert not os.path.exists(path + ".tmp")

@@ -1,0 +1,314 @@
+"""Executor resilience tests: deterministic fault injection,
+chapter-granular checkpoint/resume, retry/backoff with dead-node
+degradation, and elastic federated membership.
+
+Like tests/test_pff_exec.py, the multi-device kill-then-resume run
+happens in subprocesses (conftest keeps the in-process runner on one
+CPU device); everything else exercises the multi-NODE logic in-process
+by handing the executor the same device N times — node identity, the
+hand-off slots, fault injection and the retry machinery are all
+per-logical-node, so one physical device covers them.
+"""
+import os
+import subprocess
+import sys
+
+import jax
+import pytest
+
+from repro import api, data as data_lib
+from repro.configs.ff_mlp import FFMLPConfig
+from repro.core import faults, pff, pff_dag, pff_exec
+
+_SRC = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                    os.pardir, "src")
+
+
+def _cfg(splits=3, sizes=(784, 32, 32), **kw):
+    base = dict(layer_sizes=sizes, epochs=splits * 2, splits=splits,
+                neg_mode="random", classifier="goodness",
+                goodness_fn="sumsq", batch_size=64, seed=0)
+    base.update(kw)
+    return FFMLPConfig(**base)
+
+
+@pytest.fixture(scope="module")
+def task():
+    return data_lib.mnist_like(n_train=260, n_test=100)
+
+
+def _exec_fit(cfg, task, nodes=3, schedule="all_layers", **kw):
+    d0 = jax.devices()[0]
+    return api.fit(cfg, task, backend="executor", schedule=schedule,
+                   num_nodes=nodes, devices=[d0] * nodes, **kw)
+
+
+# ---------------------------------------------------------------------------
+# FaultPlan semantics (pure data — no executor)
+# ---------------------------------------------------------------------------
+
+def test_fault_plan_matching_and_budget():
+    plan = faults.FaultPlan([
+        faults.Fault("crash", task="train", layer=0, chapter=1, times=2),
+        faults.Fault("delay", node=1, delay_ms=50.0, times=-1),
+    ])
+    # wildcards: node is unspecified -> matches any node; budget of 2
+    assert plan.should_crash("train", 0, 1, 3)
+    assert plan.should_crash("train", 0, 1, 0)
+    assert not plan.should_crash("train", 0, 1, 0)   # budget exhausted
+    assert not plan.should_crash("train", 1, 1, 0)   # wrong layer
+    assert plan.delay_s("head", 2, 0, 1) == pytest.approx(0.05)
+    assert plan.delay_s("head", 2, 0, 0) == 0.0      # wrong node
+    assert plan.fired == {"crash": 2, "delay": 1}
+    plan.reset()
+    assert plan.fired == {} and plan.should_crash("train", 0, 1, 9)
+
+
+def test_fault_plan_handoff_and_kill():
+    plan = faults.FaultPlan([
+        faults.Fault("drop_handoff", task="state", layer=1, times=1),
+        faults.Fault("corrupt_handoff", node=2, times=-1),
+        faults.Fault("kill", chapter=2, phase="post", times=1),
+    ])
+    assert plan.handoff_action(("state", 1), 0, 0) == "drop"
+    assert plan.handoff_action(("state", 1), 0, 1) is None  # budget spent
+    assert plan.handoff_action(("params", 0), 2, 5) == "corrupt"
+    assert not plan.kill_now(2, "mid")     # wrong phase
+    assert not plan.kill_now(1, "post")    # wrong chapter
+    assert plan.kill_now(2, "post")
+    assert not plan.kill_now(2, "post")    # budget spent
+
+
+def test_fault_plan_json_roundtrip_and_validation():
+    plan = faults.FaultPlan([faults.Fault("crash", node=1, times=-1)],
+                            seed=7)
+    clone = faults.FaultPlan.from_json(plan.to_json())
+    assert clone.seed == 7 and clone.faults == plan.faults
+    with pytest.raises(ValueError, match="unknown fault kind"):
+        faults.Fault("meteor")
+    with pytest.raises(ValueError, match="phase"):
+        faults.Fault("kill", phase="pre")
+    with pytest.raises(KeyError, match="unknown fault plan"):
+        faults.named_plan("nope", splits=2, n_layers=2, num_nodes=2)
+
+
+# ---------------------------------------------------------------------------
+# Replay frontier (the DAG property checkpoint/resume rests on)
+# ---------------------------------------------------------------------------
+
+def test_replay_frontier_is_closed_cut():
+    frontier = pff_dag.replay_frontier(3, 4, 2, has_head=True,
+                                       has_neg=True, strict_neg=True)
+    assert all(t.chapter >= 2 for t in frontier)
+    kinds = {(t.kind, t.chapter) for t in frontier}
+    assert ("train", 2) in kinds and ("head", 3) in kinds
+    # chapter 0 and splits are the trivial cuts
+    assert len(pff_dag.replay_frontier(3, 4, 0)) == 12
+    assert pff_dag.replay_frontier(3, 4, 4) == []
+    with pytest.raises(ValueError, match="outside"):
+        pff_dag.replay_frontier(3, 4, 5)
+
+
+# ---------------------------------------------------------------------------
+# _Handoff: version skew + injected drop/corrupt
+# ---------------------------------------------------------------------------
+
+def test_handoff_version_skew_falls_through_to_fresh_pull():
+    """A slot parked at an older producing chapter must NOT satisfy a
+    consumer that needs a newer version — take() falls back to pulling
+    the live tree (the bit-exactness guarantee of the double buffer)."""
+    import jax.numpy as jnp
+
+    d0 = jax.devices()[0]
+    h = pff_exec._Handoff([d0, d0], enabled=True)
+    stale = {"w": jnp.zeros((2,))}
+    live = {"w": jnp.ones((2,))}
+    h.prefetch(("state", 0), 1, 0, stale)        # version 0 parked
+    got = h.take(("state", 0), 1, 1, live)       # version 1 wanted
+    assert bool(jnp.array_equal(got["w"], live["w"]))
+    assert h.stats["prefetch_hits"] == 0
+    assert h.stats["pulls_local"] == 1
+    # matching version serves the parked copy (and pops when asked)
+    got = h.take(("state", 0), 1, 0, live, pop=True)
+    assert bool(jnp.array_equal(got["w"], stale["w"]))
+    assert ("state", 0, 1) not in h.slots and h.stats["prefetch_hits"] == 1
+
+
+def test_handoff_drop_and_corrupt_injection():
+    import jax.numpy as jnp
+
+    d0 = jax.devices()[0]
+    plan = faults.FaultPlan([
+        faults.Fault("drop_handoff", task="state", times=1),
+        faults.Fault("corrupt_handoff", task="params", times=1),
+    ])
+    h = pff_exec._Handoff([d0, d0], enabled=True,
+                          fault_cb=plan.handoff_action)
+    live = {"w": jnp.ones((2,))}
+    h.prefetch(("state", 0), 1, 0, live)         # dropped
+    assert h.stats["prefetch_dropped"] == 1 and not h.slots
+    h.prefetch(("params", 0), 1, 0, live)        # poisoned + flagged
+    assert h.stats["corrupt_injected"] == 1
+    got = h.take(("params", 0), 1, 0, live)      # detected, re-pulled
+    assert h.stats["corrupt_detected"] == 1
+    assert bool(jnp.all(jnp.isfinite(got["w"])))
+
+
+# ---------------------------------------------------------------------------
+# Executor-level: retry, dead node, checkpoint/resume, elastic — all on
+# one physical device standing in for N logical nodes
+# ---------------------------------------------------------------------------
+
+def test_crash_retry_is_bit_exact_and_counted(task):
+    cfg = _cfg()
+    ref = _exec_fit(cfg, task)
+    plan = faults.named_plan("crash_once", splits=cfg.splits, n_layers=2,
+                             num_nodes=3)
+    rc = faults.ResilienceConfig(fault_plan=plan, backoff_base_s=0.001)
+    res = _exec_fit(cfg, task, resilience=rc)
+    assert pff_exec.params_bit_equal(ref.params, res.params)
+    assert res.resilience["retries"] == 1
+    assert res.resilience["faults_injected"] == {"crash": 1}
+    assert res.resilience["dead_nodes"] == []
+
+
+def test_dead_node_reassignment_is_bit_exact(task):
+    cfg = _cfg()
+    ref = _exec_fit(cfg, task)
+    plan = faults.named_plan("dead_node", splits=cfg.splits, n_layers=2,
+                             num_nodes=3)
+    rc = faults.ResilienceConfig(fault_plan=plan, max_retries=1,
+                                 backoff_base_s=0.001)
+    res = _exec_fit(cfg, task, resilience=rc)
+    assert pff_exec.params_bit_equal(ref.params, res.params)
+    st = res.resilience
+    assert st["dead_nodes"] == [2] and st["reassignments"] == 1
+    assert st["retries"] >= 1
+
+
+def test_federated_dead_node_drops_shard_gracefully(task):
+    cfg = _cfg()
+    plan = faults.named_plan("dead_node", splits=cfg.splits, n_layers=2,
+                             num_nodes=3)
+    rc = faults.ResilienceConfig(fault_plan=plan, max_retries=1,
+                                 backoff_base_s=0.001)
+    res = _exec_fit(cfg, task, schedule="federated", resilience=rc)
+    st = res.resilience
+    assert st["shards_dropped"] == 1
+    # node 2 owned exactly one of the 3 chapters
+    assert st["chapters_skipped"] == 1 and st["reassignments"] == 0
+    assert 0.0 <= res.test_acc <= 1.0
+
+
+def test_checkpoint_resume_bit_exact(task, tmp_path):
+    cfg = _cfg()
+    ref = _exec_fit(cfg, task)
+    rc = faults.ResilienceConfig(checkpoint_dir=str(tmp_path),
+                                 keep_last=2)
+    full = _exec_fit(cfg, task, resilience=rc)
+    assert pff_exec.params_bit_equal(ref.params, full.params)
+    st = full.resilience
+    assert st["checkpoints_written"] == cfg.splits
+    # retention pruned to keep_last
+    names = sorted(os.listdir(tmp_path))
+    assert names == ["pff_chapter_0001.npz", "pff_chapter_0002.npz"]
+    # resume from the OLDER manifest -> replays the last chapter and
+    # lands on the identical weight stream
+    res = _exec_fit(cfg, task,
+                    resume_from=str(tmp_path / "pff_chapter_0001.npz"))
+    assert pff_exec.params_bit_equal(ref.params, res.params)
+    assert res.resilience["resumed_from_chapter"] == 1
+    # resume from the directory picks the newest
+    res = _exec_fit(cfg, task, resume_from=str(tmp_path))
+    assert res.resilience["resumed_from_chapter"] == 2
+    assert pff_exec.params_bit_equal(ref.params, res.params)
+
+
+def test_checkpoint_resume_with_head_and_adaptive_neg(task, tmp_path):
+    """The recovery line must carry the published negatives and the
+    softmax head too (score-needing strategy + trained head)."""
+    cfg = _cfg(neg_mode="adaptive", classifier="softmax")
+    ref = _exec_fit(cfg, task)
+    rc = faults.ResilienceConfig(checkpoint_dir=str(tmp_path))
+    _exec_fit(cfg, task, resilience=rc)
+    res = _exec_fit(cfg, task,
+                    resume_from=str(tmp_path / "pff_chapter_0001.npz"))
+    assert pff_exec.params_bit_equal(ref.params, res.params,
+                                     with_head=True)
+
+
+def test_resume_rejects_mismatched_run(task, tmp_path):
+    cfg = _cfg()
+    rc = faults.ResilienceConfig(checkpoint_dir=str(tmp_path))
+    _exec_fit(cfg, task, resilience=rc)
+    other = _cfg(seed=1)
+    with pytest.raises(ValueError, match="different run"):
+        _exec_fit(other, task, resume_from=str(tmp_path))
+    with pytest.raises(FileNotFoundError):
+        _exec_fit(cfg, task, resume_from=str(tmp_path / "empty"))
+
+
+def test_elastic_federated_matches_sequential_reference(task):
+    cfg = _cfg()
+    member = {0: [0, 1], 1: [0, 1, 2], 2: [1, 2]}.__getitem__
+    ref = pff.run_elastic_federated(cfg, task, 3, member)
+    rc = faults.ResilienceConfig(membership=member)
+    res = _exec_fit(cfg, task, schedule="federated", resilience=rc)
+    assert pff_exec.params_bit_equal(ref.params, res.params)
+    rounds = res.resilience["elastic_rounds"]
+    assert [r["live"] for r in rounds] == [[0, 1], [0, 1, 2], [1, 2]]
+    assert all(abs(sum(r["weights"]) - 1.0) < 1e-9 for r in rounds)
+
+
+def test_elastic_membership_validation(task):
+    cfg = _cfg()
+    with pytest.raises(ValueError, match="Federated"):
+        _exec_fit(cfg, task, schedule="all_layers",
+                  resilience=faults.ResilienceConfig(
+                      membership=lambda r: [0]))
+    with pytest.raises(ValueError, match="key-only"):
+        _exec_fit(_cfg(neg_mode="adaptive"), task, schedule="federated",
+                  resilience=faults.ResilienceConfig(
+                      membership=lambda r: [0]))
+    rc = faults.ResilienceConfig(membership=lambda r: [])
+    with pytest.raises(ValueError, match="no live nodes"):
+        _exec_fit(cfg, task, schedule="federated", resilience=rc)
+
+
+def test_resilience_rejected_on_non_executor_backends(task):
+    cfg = _cfg()
+    with pytest.raises(ValueError, match="executor-backend"):
+        api.fit(cfg, task, backend="sequential",
+                resilience=faults.ResilienceConfig())
+    with pytest.raises(ValueError, match="executor-backend"):
+        api.fit(cfg, task, backend="federated", resume_from="/tmp/x")
+
+
+# ---------------------------------------------------------------------------
+# Kill-then-resume, 4 real (faked) devices, in a subprocess pair
+# ---------------------------------------------------------------------------
+
+def test_kill_then_resume_bit_exact_subprocess(tmp_path):
+    """Hard-kill (os._exit) the executor mid-chapter, then resume from
+    the surviving manifests; the resumed CLI gates its weight stream
+    bit-exact against the fault-free sequential trainer and exits
+    non-zero on divergence."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    env["PYTHONPATH"] = _SRC + os.pathsep + env.get("PYTHONPATH", "")
+    base = [sys.executable, "-m", "repro.core.pff_exec",
+            "--schedule", "all_layers", "--nodes", "4", "--splits", "4",
+            "--n-train", "260"]
+    td = str(tmp_path)
+    killed = subprocess.run(
+        base + ["--fault-plan", "kill_mid", "--checkpoint-dir", td],
+        capture_output=True, text=True, env=env, timeout=540)
+    assert killed.returncode == faults.KILL_EXIT, (
+        f"stdout:\n{killed.stdout}\nstderr:\n{killed.stderr}")
+    assert any(f.startswith("pff_chapter_") for f in os.listdir(td))
+    resumed = subprocess.run(
+        base + ["--resume-from", td], capture_output=True, text=True,
+        env=env, timeout=540)
+    assert resumed.returncode == 0, (
+        f"stdout:\n{resumed.stdout}\nstderr:\n{resumed.stderr}")
+    assert "bit-exact vs fault-free reference" in resumed.stdout
