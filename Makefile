@@ -1,6 +1,6 @@
 PY := PYTHONPATH=src python
 
-.PHONY: test lint bench bench-smoke pff-exec-smoke fault-smoke api-smoke
+.PHONY: test lint bench bench-smoke pff-exec-smoke fault-smoke api-smoke serve-smoke
 
 test:
 	$(PY) -m pytest -q
@@ -39,6 +39,15 @@ pff-exec-smoke:
 fault-smoke:
 	XLA_FLAGS=--xla_force_host_platform_device_count=4 \
 		$(PY) -m benchmarks.run --only=pff_faults
+
+# Serving gate on 4 faked host devices: static-replay determinism +
+# p50/p99 latency vs the recorded bound, then train-while-serve
+# (all_layers N=4) with live per-layer hot-swap — zero version-vector
+# consistency violations, >= 1 swap per chapter, and an accuracy-vs-
+# time curve that climbs (BENCH_serve.json). Exits non-zero otherwise.
+serve-smoke:
+	XLA_FLAGS=--xla_force_host_platform_device_count=4 \
+		$(PY) -m benchmarks.run --only=serve
 
 # XLA_FLAGS: the pff_exec/pff_faults sections need 4 faked host devices
 # (the other sections are device-count agnostic; tier-1 is green at 1

@@ -25,7 +25,7 @@ ERR_BUDGET = 1e-4
 
 
 SECTIONS = ("tables", "lm", "lm_schedules", "lm_negatives", "kernels",
-            "roofline", "ff_hotloop", "pff_exec", "pff_faults")
+            "roofline", "ff_hotloop", "pff_exec", "pff_faults", "serve")
 
 
 def main(argv):
@@ -112,6 +112,13 @@ def main(argv):
               "fault recovery (multi-device) #####")
         from benchmarks import pff_faults
         res = pff_faults.run(quick=not full)
+        failures.extend(res["failures"])
+
+    if only in (None, "serve"):
+        print("\n##### 8. Serving: continuous batching + live hot-swap "
+              "(multi-device) #####")
+        from benchmarks import serve as serve_bench
+        res = serve_bench.run(quick=not full)
         failures.extend(res["failures"])
 
     print(f"\nbenchmarks done in {time.time() - t0:.0f}s")

@@ -7,7 +7,7 @@ decode_32k / long_500k dry-runs lower at production shapes.
 import argparse
 
 from repro.configs import get_config
-from repro.launch.serve import serve
+from repro.launch.serve import lm_decode
 
 ap = argparse.ArgumentParser()
 ap.add_argument("--arch", default="h2o-danube-3-4b",
@@ -20,8 +20,8 @@ args = ap.parse_args()
 cfg = get_config(args.arch).reduced()
 print(f"serving reduced {args.arch} "
       f"(window={cfg.window}, kv={cfg.n_kv}/{cfg.n_heads} heads)")
-res = serve(cfg, batch=args.batch, prompt_len=args.prompt_len,
-            gen=args.gen)
+res = lm_decode(cfg, batch=args.batch, prompt_len=args.prompt_len,
+                gen=args.gen)
 print(f"prefill: {res['prefill_s']:.2f}s   "
       f"decode: {res['decode_s']:.2f}s "
       f"({res['decode_tok_per_s']:.1f} tok/s)")

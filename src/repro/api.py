@@ -38,8 +38,22 @@ pod         beyond-paper: the PFF pipeline over a (stage, data, model)
             TPU-style mesh for transformer LM configs
             (``repro.core.pff_pod``); ``num_nodes`` = pipeline stages.
 
+Serving (``api.serve`` — ROADMAP item 2's train-while-serving) is the
+fourth registry-driven surface: ``api.traffic`` shapes the request
+stream (uniform / zipf / bursty; ``api.register_traffic`` adds more),
+``repro.serve`` provides the continuous-batching loop, and the executor
+hot-publishes each freshly-trained layer into the serving replica
+mid-run:
+
+    res = api.serve(cfg, task, traffic="zipf", num_nodes=4)  # train+serve
+    res.slo["latency_p99_ms"], res.slo["consistency_violations"]
+    res = api.fit(cfg, task, backend="executor", num_nodes=4,
+                  serve=api.ServeConfig(traffic="bursty"))   # same, via fit
+
 Deprecated entry points ``pff.train_ff_mlp``, ``pff.train_federated``
-and ``pff_exec.run_pff_exec`` delegate here with a DeprecationWarning.
+and ``pff_exec.run_pff_exec`` delegate here with a DeprecationWarning;
+``launch.serve.serve`` (the old transformer decode demo) warns and
+delegates to ``launch.serve.lm_decode``.
 
 ``python -m repro.api --selftest`` (= ``make api-smoke``) runs every
 registered strategy through the sequential backend on a tiny task and
@@ -51,7 +65,7 @@ import dataclasses
 from typing import List, Optional
 
 from repro import data as data_lib
-from repro.core import pff, pff_exec, strategies
+from repro.core import ff_mlp, pff, pff_exec, strategies
 from repro.core.faults import (              # re-exported resilience surface
     FaultPlan, ResilienceConfig,
 )
@@ -59,11 +73,16 @@ from repro.core.strategies import (          # re-exported registry surface
     classifier, goodness, negatives,
     register_classifier, register_goodness, register_negatives,
 )
+from repro.serve import engine as serve_engine
+from repro.serve.engine import ServeConfig   # re-exported serving surface
+from repro.serve.traffic import register_traffic, traffic
 
 __all__ = [
-    "fit", "simulate", "FitResult", "BACKENDS",
-    "negatives", "goodness", "classifier",
+    "fit", "simulate", "serve", "FitResult", "ServeResult", "ServeConfig",
+    "BACKENDS",
+    "negatives", "goodness", "classifier", "traffic",
     "register_negatives", "register_goodness", "register_classifier",
+    "register_traffic",
     "FaultPlan", "ResilienceConfig",
 ]
 
@@ -92,7 +111,31 @@ class FitResult:
     sim: Optional[pff.SimResult] = None
     profile: Optional[dict] = None
     resilience: Optional[dict] = None
+    serve: Optional["ServeResult"] = None   # fit(serve=ServeConfig(...))
     raw: object = None
+
+
+@dataclasses.dataclass
+class ServeResult:
+    """What ``api.serve`` returns — same field conventions as
+    ``FitResult``: a ``records`` list (per-request lifecycle dicts, the
+    serving analog of the per-task ``TaskRecord`` list), per-phase
+    ``timings``, and a ``.slo`` stats block shaped like
+    ``FitResult.resilience`` (one JSON-ready dict of counters and
+    percentiles: p50/p99 latency, throughput, shed rate, swap count,
+    staleness, consistency violations)."""
+    cfg: object
+    traffic: str
+    schedule: Optional[str] = None          # None = serve-only (static)
+    num_nodes: int = 1
+    records: Optional[List[dict]] = None
+    swaps: Optional[List[dict]] = None      # hot-swap timeline
+    slo: Optional[dict] = None
+    timings: Optional[dict] = None          # {"serve_s", ["train_s"]}
+    accuracy_by_version: Optional[dict] = None
+    test_acc: Optional[float] = None        # accuracy over served requests
+    fit: Optional[FitResult] = None         # training side (combined mode)
+    raw: object = None                      # serve.engine.EngineResult
 
 
 def _validate_strategies(cfg):
@@ -111,7 +154,8 @@ def _validate_strategies(cfg):
 def fit(cfg, task=None, *, backend="sequential", schedule=None,
         num_nodes=1, probe_every=0, verbose=False, profile=False,
         devices=None, overlap=True, resilience=None, resume_from=None,
-        comm_time=0.0, steps=40, batch=8, seq=64, lr=1e-3) -> FitResult:
+        serve=None, comm_time=0.0, steps=40, batch=8, seq=64,
+        lr=1e-3) -> FitResult:
     """Train ``cfg`` on ``task`` with the chosen backend. See the module
     docstring for the backend table.
 
@@ -134,6 +178,12 @@ def fit(cfg, task=None, *, backend="sequential", schedule=None,
     resume_from: executor backend — a chapter manifest (or its
     directory) written by a previous resilient run; training replays
     the DAG from the next chapter, bit-exactly.
+    serve: executor backend — a ``ServeConfig``: run the combined
+    train-while-serve mode (the executor hot-publishes every freshly-
+    trained layer into a serving replica, which serves the config's
+    traffic concurrently). The serving side comes back on
+    ``FitResult.serve``; ``api.serve()`` is the same machinery with the
+    serving result on top.
     comm_time: simulate backend — per-DAG-edge cross-node hand-off cost.
     steps/batch/seq/lr: pod backend — pipeline run length and shapes
     (``task`` may be an iterable of token blocks, or None to use the
@@ -148,6 +198,14 @@ def fit(cfg, task=None, *, backend="sequential", schedule=None,
             f"resilience/resume_from are executor-backend features "
             f"(chapter checkpoints, fault injection, elastic "
             f"membership); got backend={backend!r}")
+    if serve is not None and backend != "executor":
+        raise ValueError(
+            f"serve= runs the train-while-serve mode, which needs the "
+            f"executor backend's live per-layer publication; got "
+            f"backend={backend!r}")
+    if serve is not None and not isinstance(serve, ServeConfig):
+        raise TypeError(f"serve= expects an api.ServeConfig, got "
+                        f"{type(serve).__name__}")
     if backend == "pod":
         return _fit_pod(cfg, task, num_nodes=num_nodes, steps=steps,
                         batch=batch, seq=seq, lr=lr, verbose=verbose)
@@ -178,6 +236,11 @@ def fit(cfg, task=None, *, backend="sequential", schedule=None,
         ex = pff_exec.PFFExecutor(cfg, task, schedule, num_nodes,
                                   devices=devices, overlap=overlap,
                                   resilience=resilience)
+        if serve is not None:
+            return _run_combined(cfg, ex, serve, source=None,
+                                 resume_from=resume_from,
+                                 schedule=schedule,
+                                 num_nodes=num_nodes).fit
         res = ex.run(profile=profile, resume_from=resume_from)
         return FitResult(backend=backend, cfg=cfg, params=res.params,
                          schedule=schedule, num_nodes=num_nodes,
@@ -200,6 +263,112 @@ def fit(cfg, task=None, *, backend="sequential", schedule=None,
                      train_acc=res.train_acc, history=res.history,
                      makespan=sim.makespan, speedup=sim.speedup,
                      utilization=sim.utilization, sim=sim, raw=res)
+
+
+# ---------------------------------------------------------------------------
+# Serving facade (repro.serve machinery behind api.serve / fit(serve=...))
+# ---------------------------------------------------------------------------
+
+def _serve_records(engine_res) -> List[dict]:
+    """Per-request lifecycle dicts (JSON-ready) from the engine's
+    ``Request`` objects — the ``ServeResult.records`` convention."""
+    return [{"id": r.id, "t_arrival": r.t_arrival, "t_admit": r.t_admit,
+             "t_done": r.t_done, "latency": r.latency,
+             "version": r.version, "pred": r.pred, "label": r.label,
+             "correct": (r.pred == r.label) if r.pred is not None
+             else None}
+            for r in engine_res.requests]
+
+
+def _serve_result(cfg, sconfig, engine_res, *, schedule=None, num_nodes=1,
+                  fit_result=None) -> ServeResult:
+    slo = serve_engine.summarize(engine_res)
+    return ServeResult(
+        cfg=cfg, traffic=sconfig.traffic, schedule=schedule,
+        num_nodes=num_nodes, records=_serve_records(engine_res),
+        swaps=engine_res.swaps, slo=slo,
+        timings=dict(engine_res.timings),
+        accuracy_by_version=serve_engine.accuracy_by_version(engine_res),
+        test_acc=slo["accuracy"], fit=fit_result, raw=engine_res)
+
+
+def _run_combined(cfg, ex, sconfig, *, source, resume_from, schedule,
+                  num_nodes) -> ServeResult:
+    """Train-while-serve: one executor run with live publication, one
+    serve loop, results cross-linked (``ServeResult.fit`` /
+    ``FitResult.serve``)."""
+    engine_res = serve_engine.train_while_serve(ex, sconfig, source,
+                                                resume_from=resume_from)
+    res = engine_res.exec_result
+    fit_res = FitResult(backend="executor", cfg=cfg, params=res.params,
+                        schedule=schedule, num_nodes=num_nodes,
+                        records=res.records, test_acc=res.test_acc,
+                        makespan=res.makespan, resilience=res.resilience,
+                        raw=res)
+    sres = _serve_result(cfg, sconfig, engine_res, schedule=schedule,
+                         num_nodes=num_nodes, fit_result=fit_res)
+    fit_res.serve = sres
+    return sres
+
+
+def serve(cfg, task=None, *, traffic=None, source=None, params=None,
+          schedule=None, num_nodes=1, devices=None, overlap=True,
+          resilience=None, resume_from=None, serve_cfg=None,
+          **knobs) -> ServeResult:
+    """Serve the goodness classifier under deterministic open-loop
+    traffic — while TRAINING it live on the executor (the default), or
+    from a fixed ``params`` snapshot (serve-only replay).
+
+    traffic: a name from the ``api.traffic`` registry (uniform / zipf /
+    bursty, or anything added with ``api.register_traffic``).
+    source: a ``data.Source`` for request payloads; defaults to the
+    task's test split (``data.source_of``).
+    params: a trained params dict — serve-only mode: no training
+    underneath, one static snapshot at version 0 (``n_requests``
+    bounds the run, default 256).
+    schedule/num_nodes/devices/overlap/resilience/resume_from: the
+    executor knobs, exactly as ``fit(backend="executor")`` takes them
+    (combined mode only).
+    serve_cfg / **knobs: a ``ServeConfig``, and/or its fields as
+    keywords (``rate=...``, ``max_batch=...``, ``max_wait_s=...``,
+    ``queue_cap=...``, ``n_requests=...``, ``seed=...``) — keywords win.
+    """
+    base = serve_cfg if serve_cfg is not None else ServeConfig()
+    if traffic is not None:
+        knobs["traffic"] = traffic
+    valid = {f.name for f in dataclasses.fields(ServeConfig)}
+    bad = set(knobs) - valid
+    if bad:
+        raise TypeError(f"unknown ServeConfig knob(s) {sorted(bad)}; "
+                        f"valid: {sorted(valid)}")
+    sconfig = dataclasses.replace(base, **knobs)
+
+    good = _validate_strategies(cfg)
+    if source is None:
+        if task is None:
+            raise ValueError("serve needs a task or an explicit "
+                             "source= for request payloads")
+        source = data_lib.source_of(task)
+
+    if params is not None:
+        if sconfig.n_requests is None:
+            sconfig = dataclasses.replace(sconfig, n_requests=256)
+        engine_res = serve_engine.serve_static(
+            params, cfg, source, sconfig,
+            eval_mode=good.eval_mode(cfg), impl=ff_mlp.kernel_impl(cfg))
+        return _serve_result(cfg, sconfig, engine_res)
+
+    if task is None:
+        raise ValueError("train-while-serve needs the training task "
+                         "(pass params= for serve-only)")
+    schedule = schedule or ("sequential" if num_nodes == 1
+                            else "all_layers")
+    ex = pff_exec.PFFExecutor(cfg, task, schedule, num_nodes,
+                              devices=devices, overlap=overlap,
+                              resilience=resilience)
+    return _run_combined(cfg, ex, sconfig, source=source,
+                         resume_from=resume_from, schedule=schedule,
+                         num_nodes=num_nodes)
 
 
 def simulate(result_or_records, schedule, num_nodes,

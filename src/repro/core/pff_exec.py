@@ -629,6 +629,13 @@ class PFFExecutor:
         self._states[k] = state
         self._ver[k] = chapter
         self._prefetch_state(k, chapter, state)
+        if self._publish is not None:
+            # push the freshly-trained layer onto the serving bus the
+            # moment its chapter-train task completes — FF's layer
+            # locality is what makes the mid-run per-layer hot-swap
+            # sound (no global backward pass to invalidate it). The bus
+            # copies before parking; the donated buffers stay ours.
+            self._publish.publish_layer(k, chapter, self.good.export([state]))
         self._maybe_record(profile, node, "train", k, chapter, t0,
                            state[0])
         return state[0]
@@ -651,6 +658,8 @@ class PFFExecutor:
             batch=self.cfg.batch_size, epochs=self.C)
         self._head = (head, op)
         self._head_ver = chapter
+        if self._publish is not None:
+            self._publish.publish_head(chapter, head)
         if chapter + 1 < self.cfg.splits:
             nxt = pff_dag.head_node_of(self.schedule, self.num_nodes,
                                        n_layers=self.n_layers,
@@ -823,6 +832,7 @@ class PFFExecutor:
             self._head = pff.weighted_average_trees(
                 [jax.device_put(per_node[n][1], dev0) for n in ok], w)
             self._head_ver = r
+        self._publish_snapshot(r)
         self._rstats["elastic_rounds"].append(
             {"round": r, "live": ok, "weights": w})
 
@@ -835,8 +845,22 @@ class PFFExecutor:
                 "shards_dropped": 0, "chapters_skipped": 0,
                 "elastic_rounds": None}
 
+    def _publish_snapshot(self, version: int):
+        """Publish the CURRENT full model (every layer + head) at one
+        version — the initial pre-training snapshot, a restored
+        recovery line, and the elastic federated aggregate (whose
+        layers all advance together)."""
+        if self._publish is None:
+            return
+        for k, state in enumerate(self._states):
+            self._publish.publish_layer(k, version,
+                                        self.good.export([state]))
+        if self.has_head:
+            self._publish.publish_head(version, self._head[0])
+
     def run(self, *, profile: bool = False,
-            resume_from: Optional[str] = None) -> ExecResult:
+            resume_from: Optional[str] = None,
+            publish=None) -> ExecResult:
         """Executes the schedule once. ``profile=True`` blocks after
         every task to collect per-task ``TaskRecord``s (destroys the
         overlap, so use a separate non-profiled run for makespan).
@@ -845,6 +869,14 @@ class PFFExecutor:
         its directory — the newest manifest is used); training replays
         the DAG from the first chapter after it, bit-exactly (the
         restore cost rides the timed window, like initial placement).
+
+        publish: a ``repro.serve.WeightBus`` (anything with
+        ``publish_layer``/``publish_head``) — every chapter-train task
+        pushes its freshly-trained layer the moment it completes, plus
+        an initial snapshot before chapter 0 (or the restored chapter),
+        so serving replicas hot-swap per layer mid-run. Publication is
+        read-only with copy-on-publish: the weight stream stays
+        bit-exact, publish or not.
         """
         cfg = self.cfg
         rc = self.resilience
@@ -869,6 +901,7 @@ class PFFExecutor:
         self._neg: Tuple[int, object] = (-1, None)
         self._ver = [-1] * self.n_layers       # chapter of last train(k)
         self._head_ver = -1
+        self._publish = publish
         self._handoff = _Handoff(
             self.devices, self.overlap,
             fault_cb=plan.handoff_action if plan is not None else None)
@@ -891,6 +924,10 @@ class PFFExecutor:
                 strict_neg=self._ckpt_has_neg())
             self._rstats["resumed_from_chapter"] = done
             self._rstats["restore_time_s"] = time.perf_counter() - t0
+        # serving replicas get a full pre-training (or restored-line)
+        # snapshot before the first chapter task dispatches
+        self._publish_snapshot(min([self._head_ver] + self._ver
+                                   if self.has_head else self._ver))
         for chapter in range(start_chapter, cfg.splits):
             if elastic:
                 self._run_round_elastic(chapter, profile)

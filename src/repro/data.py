@@ -10,12 +10,22 @@ LM task: a random first-order Markov chain over the vocabulary with a
 Zipf-ish stationary marginal — gives next-token structure a model can
 learn (CE well below uniform) while being fully deterministic.
 
-All generators are pure functions of (seed, split) — every node in a
-distributed/federated run regenerates its shard without communication.
+Streaming sources: every generator is a pure function of (seed, split) —
+a node in a distributed/federated run, or a serving-traffic generator,
+regenerates its data without communication. That contract is now a
+small protocol, ``Source``: ``sample(split, n, seed)`` must return the
+same arrays for the same arguments, forever. ``PrototypeSource`` is the
+generator behind ``mnist_like``/``cifar_like`` (which delegate to it
+and return bit-identical arrays to what they always returned);
+``ArraySource`` adapts already-materialized arrays (e.g. a task's test
+split) to the same protocol so request generators and batch iteration
+consume one interface.
 """
 from __future__ import annotations
 
 import dataclasses
+import functools
+from typing import Protocol, Tuple, runtime_checkable
 
 import numpy as np
 
@@ -34,6 +44,32 @@ class ImageTask:
     dim: int
 
 
+@runtime_checkable
+class Source(Protocol):
+    """Minimal streaming-source protocol (ROADMAP item 5 start).
+
+    ``sample(split, n, seed)`` returns ``(x, y)`` with ``x`` of shape
+    (n, dim) float32 in [0, 1] and ``y`` (n,) int32 — and MUST be a pure
+    function of ``(split, n, seed)``: any consumer (a federated node, a
+    serving request generator, a replayed benchmark) regenerates the
+    exact same arrays without communication. ``split`` is a free-form
+    label ("train" / "test" / "serve" / ...) that seeds an independent
+    stream per consumer.
+    """
+    num_classes: int
+    dim: int
+
+    def sample(self, split: str, n: int, seed: int = 0
+               ) -> Tuple[np.ndarray, np.ndarray]: ...
+
+
+def _split_rng(seed, split: str, stream_seed: int):
+    """Deterministic per-(seed, split, stream) generator: the split label
+    is folded in bytewise so distinct labels give independent streams."""
+    return np.random.default_rng(
+        [int(seed), int(stream_seed)] + list(split.encode("utf-8")))
+
+
 def _smooth_noise(rng, n, side, ch, scale):
     """Low-frequency noise: upsampled coarse grid (structured, image-like)."""
     coarse = rng.normal(size=(n, ch, side // 4, side // 4)) * scale
@@ -41,51 +77,139 @@ def _smooth_noise(rng, n, side, ch, scale):
     return up.reshape(n, -1)
 
 
-def _make_image_task(seed, n_train, n_test, side, ch, num_classes,
-                     proto_scale, noise_scale, overlap, max_shift=3):
-    rng = np.random.default_rng(seed)
-    dim = side * side * ch
-    # smooth prototypes (blob-like, so pixels are spatially correlated)
-    protos = _smooth_noise(rng, num_classes, side, ch, proto_scale)
-    if overlap:
-        # mix prototypes so classes share structure (harder task)
-        mix = rng.dirichlet(np.ones(num_classes) * 0.4, size=num_classes)
-        protos = mix @ protos
-    protos_img = protos.reshape(num_classes, ch, side, side)
+@dataclasses.dataclass(frozen=True)
+class PrototypeSource:
+    """The class-prototype generator behind ``mnist_like``/``cifar_like``
+    as a streaming ``Source``.
 
-    def sample(n, rng):
-        y = rng.integers(0, num_classes, size=n).astype(np.int32)
+    ``task(n_train, n_test)`` reproduces the classic array-returning
+    helpers bit-for-bit (one rng threaded protos -> train -> test, the
+    original call sequence). ``sample(split, n, seed)`` draws a fresh
+    deterministic batch from the SAME prototypes for any (split, seed) —
+    what serving-request generators and streaming consumers use.
+    """
+    seed: int
+    side: int
+    ch: int
+    num_classes: int
+    proto_scale: float
+    noise_scale: float
+    overlap: bool
+    max_shift: int = 3
+
+    @property
+    def dim(self) -> int:
+        return self.side * self.side * self.ch
+
+    def _protos(self, rng):
+        """Class prototypes; consumes ``rng`` exactly like the original
+        ``_make_image_task`` preamble (bit-compat depends on it)."""
+        protos = _smooth_noise(rng, self.num_classes, self.side, self.ch,
+                               self.proto_scale)
+        if self.overlap:
+            # mix prototypes so classes share structure (harder task)
+            mix = rng.dirichlet(np.ones(self.num_classes) * 0.4,
+                                size=self.num_classes)
+            protos = mix @ protos
+        return protos.reshape(self.num_classes, self.ch, self.side,
+                              self.side)
+
+    @functools.cached_property
+    def _protos_cached(self):
+        return self._protos(np.random.default_rng(self.seed))
+
+    def _draw(self, protos_img, n, rng):
+        y = rng.integers(0, self.num_classes, size=n).astype(np.int32)
         x = protos_img[y]
-        if max_shift:
+        if self.max_shift:
             # translation jitter (MNIST-style position variance) — breaks
             # linear separability while MLPs cope fine
-            dx = rng.integers(-max_shift, max_shift + 1, size=n)
-            dy = rng.integers(-max_shift, max_shift + 1, size=n)
+            dx = rng.integers(-self.max_shift, self.max_shift + 1, size=n)
+            dy = rng.integers(-self.max_shift, self.max_shift + 1, size=n)
             x = np.stack([np.roll(np.roll(im, a, axis=1), b, axis=2)
                           for im, a, b in zip(x, dx, dy)])
-        x = x.reshape(n, dim)
-        x = x + _smooth_noise(rng, n, side, ch, noise_scale)
-        x = x + rng.normal(size=(n, dim)) * noise_scale * 0.5
+        x = x.reshape(n, self.dim)
+        x = x + _smooth_noise(rng, n, self.side, self.ch, self.noise_scale)
+        x = x + rng.normal(size=(n, self.dim)) * self.noise_scale * 0.5
         x = 1.0 / (1.0 + np.exp(-x))                     # into [0, 1]
         return x.astype(np.float32), y
 
-    x_tr, y_tr = sample(n_train, rng)
-    x_te, y_te = sample(n_test, rng)
-    return ImageTask(x_tr, y_tr, x_te, y_te, num_classes, dim)
+    def task(self, n_train, n_test) -> ImageTask:
+        """The classic fixed-size task: protos, train and test all drawn
+        from ONE threaded rng (the original helpers' exact stream)."""
+        rng = np.random.default_rng(self.seed)
+        protos_img = self._protos(rng)
+        x_tr, y_tr = self._draw(protos_img, n_train, rng)
+        x_te, y_te = self._draw(protos_img, n_test, rng)
+        return ImageTask(x_tr, y_tr, x_te, y_te, self.num_classes,
+                         self.dim)
+
+    def sample(self, split: str, n: int, seed: int = 0):
+        """Fresh deterministic draw per (split, seed) — same prototypes,
+        independent noise/label stream."""
+        return self._draw(self._protos_cached, n,
+                          _split_rng(self.seed, split, seed))
+
+
+@dataclasses.dataclass(frozen=True)
+class ArraySource:
+    """Already-materialized arrays as a ``Source``: ``sample`` draws a
+    deterministic-with-replacement subset per (split, seed). Adapts a
+    task's test split (or any labeled array pair) to the streaming
+    interface serving-request generators consume."""
+    x: np.ndarray
+    y: np.ndarray
+    num_classes: int
+
+    @property
+    def dim(self) -> int:
+        return int(self.x.shape[-1])
+
+    def sample(self, split: str, n: int, seed: int = 0):
+        idx = _split_rng(0, split, seed).integers(0, len(self.x), size=n)
+        return (np.asarray(self.x)[idx],
+                np.asarray(self.y)[idx].astype(np.int32))
+
+    def minibatches(self, batch_size, seed):
+        """Shuffled minibatch iterator over the arrays (one epoch) — the
+        exact stream ``batches`` always produced."""
+        rng = np.random.default_rng(seed)
+        order = rng.permutation(len(self.x))
+        for i in range(0, len(self.x) - batch_size + 1, batch_size):
+            j = order[i:i + batch_size]
+            yield self.x[j], self.y[j]
+
+
+def source_of(task: ImageTask, split: str = "test") -> ArraySource:
+    """A task's train/test arrays as a streaming ``Source`` (the default
+    request-payload source for ``repro.serve``)."""
+    if split == "train":
+        return ArraySource(task.x_train, task.y_train, task.num_classes)
+    return ArraySource(task.x_test, task.y_test, task.num_classes)
+
+
+def mnist_source(seed=0) -> PrototypeSource:
+    """The generator behind ``mnist_like`` as a streaming ``Source``."""
+    return PrototypeSource(seed, side=28, ch=1, num_classes=10,
+                           proto_scale=2.0, noise_scale=0.8,
+                           overlap=False, max_shift=4)
+
+
+def cifar_source(seed=0) -> PrototypeSource:
+    """The generator behind ``cifar_like`` as a streaming ``Source``."""
+    return PrototypeSource(seed + 7, side=32, ch=3, num_classes=10,
+                           proto_scale=1.0, noise_scale=0.9,
+                           overlap=True, max_shift=3)
 
 
 def mnist_like(seed=0, n_train=6000, n_test=1000):
     """28x28x1, 10 classes, separable but not linearly (MNIST stand-in)."""
-    return _make_image_task(seed, n_train, n_test, side=28, ch=1,
-                            num_classes=10, proto_scale=2.0,
-                            noise_scale=0.8, overlap=False, max_shift=4)
+    return mnist_source(seed).task(n_train, n_test)
 
 
 def cifar_like(seed=0, n_train=6000, n_test=1000):
     """32x32x3, 10 classes, overlapping prototypes + heavy noise."""
-    return _make_image_task(seed + 7, n_train, n_test, side=32, ch=3,
-                            num_classes=10, proto_scale=1.0,
-                            noise_scale=0.9, overlap=True, max_shift=3)
+    return cifar_source(seed).task(n_train, n_test)
 
 
 def shard_task(task: ImageTask, node: int, num_nodes: int) -> ImageTask:
@@ -96,12 +220,11 @@ def shard_task(task: ImageTask, node: int, num_nodes: int) -> ImageTask:
 
 
 def batches(x, y, batch_size, seed):
-    """Shuffled minibatch index iterator (one epoch)."""
-    rng = np.random.default_rng(seed)
-    order = rng.permutation(len(x))
-    for i in range(0, len(x) - batch_size + 1, batch_size):
-        j = order[i:i + batch_size]
-        yield x[j], y[j]
+    """Shuffled minibatch index iterator (one epoch) — delegates to the
+    ``ArraySource`` streaming interface, same stream as always."""
+    yield from ArraySource(np.asarray(x), np.asarray(y),
+                           int(np.max(y)) + 1 if len(y) else 0
+                           ).minibatches(batch_size, seed)
 
 
 # ---------------------------------------------------------------------------

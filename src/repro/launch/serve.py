@@ -1,14 +1,28 @@
-"""Serving launcher: prefill a batch of prompts, then batched greedy
-decode against the KV caches. CPU-scale demo of the serve path the
-decode dry-runs lower at production shapes.
+"""Serving launcher — a thin CLI over the ``repro.api`` facade.
 
-  PYTHONPATH=src python -m repro.launch.serve --arch qwen2-0.5b \
-      --batch 4 --prompt-len 64 --gen 32
+Default mode (``--mode ff``) runs the train-while-serve workload:
+``api.serve`` trains the config on the executor while a continuous-
+batching replica serves the configured traffic from live hot-swapped
+weights, then prints the SLO block and the swap timeline.
+
+  PYTHONPATH=src python -m repro.launch.serve --traffic zipf \
+      --schedule all_layers --nodes 4
+
+``--mode lm`` keeps the old transformer prefill+decode demo
+(``lm_decode``):
+
+  PYTHONPATH=src python -m repro.launch.serve --mode lm \
+      --arch qwen2-0.5b --batch 4 --prompt-len 64 --gen 32
+
+The module-level ``serve(cfg, ...)`` of earlier versions (the LM demo)
+is deprecated: call ``lm_decode`` for the demo or ``repro.api.serve``
+for the serving subsystem.
 """
 from __future__ import annotations
 
 import argparse
 import time
+import warnings
 
 import jax
 import jax.numpy as jnp
@@ -18,7 +32,9 @@ from repro.configs import get_config
 from repro.models import transformer
 
 
-def serve(cfg, *, batch, prompt_len, gen, seed=0, greedy=True):
+def lm_decode(cfg, *, batch, prompt_len, gen, seed=0, greedy=True):
+    """Prefill a batch of prompts, then batched greedy decode against
+    the KV caches — the CPU-scale transformer serving demo."""
     key = jax.random.PRNGKey(seed)
     params = transformer.init(key, cfg)
     prompts = jnp.asarray(next(iter(data_lib.lm_batches(
@@ -63,24 +79,101 @@ def serve(cfg, *, batch, prompt_len, gen, seed=0, greedy=True):
     }
 
 
-def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True)
-    ap.add_argument("--full", action="store_true")
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=64)
-    ap.add_argument("--gen", type=int, default=32)
-    ap.add_argument("--seed", type=int, default=0)
-    args = ap.parse_args()
+def serve(cfg, *, batch, prompt_len, gen, seed=0, greedy=True):
+    """Deprecated: this was the transformer decode demo — use
+    ``lm_decode`` (same signature), or ``repro.api.serve`` for the
+    goodness-classifier serving subsystem."""
+    warnings.warn("launch.serve.serve is deprecated; use launch.serve."
+                  "lm_decode for the transformer demo or repro.api."
+                  "serve for the serving subsystem",
+                  DeprecationWarning, stacklevel=2)
+    return lm_decode(cfg, batch=batch, prompt_len=prompt_len, gen=gen,
+                     seed=seed, greedy=greedy)
+
+
+def _main_ff(args):
+    from repro import api
+    from repro.configs.ff_mlp import FFMLPConfig
+
+    task = data_lib.mnist_like(n_train=args.n_train, n_test=400)
+    cfg = FFMLPConfig(
+        layer_sizes=(task.dim,) + (args.width,) * args.layers,
+        epochs=args.epochs, splits=args.splits, neg_mode="random",
+        classifier="goodness", batch_size=64, seed=args.seed)
+    res = api.serve(cfg, task, traffic=args.traffic,
+                    schedule=args.schedule, num_nodes=args.nodes,
+                    rate=args.rate, max_batch=args.max_batch,
+                    max_wait_s=args.max_wait, queue_cap=args.queue_cap,
+                    seed=args.seed)
+    slo = res.slo
+    print(f"train-while-serve: schedule={res.schedule} "
+          f"nodes={res.num_nodes} traffic={res.traffic}")
+    print(f"  train acc={res.fit.test_acc:.4f} "
+          f"makespan={res.fit.makespan:.2f}s")
+    print(f"  served {slo['requests']} req @ "
+          f"{slo['throughput_rps']:.1f} rps  "
+          f"p50={slo['latency_p50_ms']:.1f}ms "
+          f"p99={slo['latency_p99_ms']:.1f}ms  "
+          f"shed={slo['shed_rate']:.3f}")
+    print(f"  swaps={slo['swaps']} "
+          f"staleness_max={slo['staleness_max_s']:.3f}s "
+          f"violations={slo['consistency_violations']}")
+    for v, row in res.accuracy_by_version.items():
+        print(f"    version {v:3d}: n={row['n']:5d} "
+              f"acc={row['accuracy']:.3f}")
+    return 1 if slo["consistency_violations"] else 0
+
+
+def _main_lm(args):
     cfg = get_config(args.arch)
     if not args.full:
         cfg = cfg.reduced()
-    res = serve(cfg, batch=args.batch, prompt_len=args.prompt_len,
-                gen=args.gen, seed=args.seed)
+    res = lm_decode(cfg, batch=args.batch, prompt_len=args.prompt_len,
+                    gen=args.gen, seed=args.seed)
     print(f"prefill {res['prefill_s']:.2f}s  decode {res['decode_s']:.2f}s"
           f"  ({res['decode_tok_per_s']:.1f} tok/s)")
     print("first generated rows:", res["generated"][:2, :12])
+    return 0
+
+
+def main(argv=None):
+    from repro import api
+    from repro.core import pff_dag
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--mode", choices=("ff", "lm"), default="ff",
+                    help="ff: train-while-serve via api.serve (default);"
+                         " lm: transformer prefill+decode demo")
+    g = ap.add_argument_group("ff mode")
+    g.add_argument("--traffic", default="uniform",
+                   choices=list(api.traffic.names()))
+    g.add_argument("--schedule", default="all_layers",
+                   choices=list(pff_dag.SCHEDULES))
+    g.add_argument("--nodes", type=int, default=4)
+    g.add_argument("--rate", type=float, default=300.0)
+    g.add_argument("--max-batch", type=int, default=64)
+    g.add_argument("--max-wait", type=float, default=0.02)
+    g.add_argument("--queue-cap", type=int, default=512)
+    g.add_argument("--epochs", type=int, default=100)
+    g.add_argument("--splits", type=int, default=4)
+    g.add_argument("--layers", type=int, default=2)
+    g.add_argument("--width", type=int, default=256)
+    g.add_argument("--n-train", type=int, default=2560)
+    lm = ap.add_argument_group("lm mode")
+    lm.add_argument("--arch", default=None,
+                    help="transformer config name (lm mode)")
+    lm.add_argument("--full", action="store_true")
+    lm.add_argument("--batch", type=int, default=4)
+    lm.add_argument("--prompt-len", type=int, default=64)
+    lm.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+    if args.mode == "lm":
+        if args.arch is None:
+            ap.error("--mode lm requires --arch")
+        return _main_lm(args)
+    return _main_ff(args)
 
 
 if __name__ == "__main__":
-    main()
+    raise SystemExit(main())

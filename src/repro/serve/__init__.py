@@ -1,0 +1,34 @@
+"""Train-while-serving: a continuous-batching goodness-classifier
+serving subsystem with live per-layer weight hot-swap (ROADMAP item 2).
+
+FF's layer-local updates are the whole reason this exists: with no
+global backward pass, a freshly-trained layer k is immediately a valid
+component of the serving model — the executor publishes each layer the
+moment its chapter-train task completes (`PFFExecutor.run(publish=...)`)
+and a serving replica swaps whole consistent snapshots in between
+request batches, mid-training-run.
+
+Layout (each module is one moving part):
+
+- ``traffic``  — deterministic open-loop request generators behind a
+  registry (uniform / zipf / bursty), seeded with ``data.py``'s
+  per-(seed, chunk) idiom so any run replays bit-identically.
+- ``queue``    — bounded admission queue (accept or shed, never block).
+- ``batcher``  — continuous batch former (max-batch / max-wait knobs).
+- ``bus``      — ``WeightBus``: the publication channel between the
+  training executor and serving replicas; assembles per-layer
+  publications into fully-consistent versioned snapshots.
+- ``replica``  — scoring replica: installs snapshots monotonically with
+  a version-vector check, scores batches through the fused
+  ``ops.ff_dense`` path at one fixed jit shape.
+- ``engine``   — the serve loop + the combined train-while-serve
+  driver. ``repro.api.serve()`` is the supported entry point.
+"""
+from repro.serve.batcher import Batcher                       # noqa: F401
+from repro.serve.bus import WeightBus                         # noqa: F401
+from repro.serve.engine import (                              # noqa: F401
+    ServeConfig, run_serve, train_while_serve)
+from repro.serve.queue import AdmissionQueue, Request         # noqa: F401
+from repro.serve.replica import Replica                       # noqa: F401
+from repro.serve.traffic import (                             # noqa: F401
+    RequestStream, TrafficStrategy, register_traffic, traffic)

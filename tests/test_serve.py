@@ -1,0 +1,348 @@
+"""Serving subsystem tests: version-vector consistency under concurrent
+publish, queue admission/backpressure, batch forming, deterministic
+traffic replay, the streaming ``data.Source`` protocol, and the e2e
+train-while-serve smoke (accuracy improves across hot-swaps; the
+published weight stream stays bit-exact)."""
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro import api, data as data_lib
+from repro.configs.ff_mlp import FFMLPConfig
+from repro.core import pff_exec
+from repro.serve import (
+    AdmissionQueue, Batcher, Replica, Request, RequestStream, ServeConfig,
+    WeightBus,
+)
+from repro.serve import engine as serve_engine
+from repro.serve.traffic import traffic as traffic_registry
+
+
+def _layer_piece(k, version, dim=4):
+    """A fake per-layer export piece (shape of ``good.export([state])``)
+    whose bits encode (layer, version) — lets assertions detect a torn
+    snapshot by content, not just by version tag."""
+    return {"layers": [{"w": np.full((dim, dim), version * 100 + k,
+                                     np.float32),
+                        "b": np.zeros(dim, np.float32)}]}
+
+
+# ---------------------------------------------------------------------------
+# WeightBus + Replica: the consistency contract
+# ---------------------------------------------------------------------------
+
+def test_bus_exposes_only_fully_published_versions():
+    bus = WeightBus(3, has_head=True)
+    bus.publish_layer(0, 0, _layer_piece(0, 0))
+    bus.publish_layer(1, 0, _layer_piece(1, 0))
+    assert bus.next_snapshot(-10) is None          # layer 2 + head missing
+    bus.publish_layer(2, 0, _layer_piece(2, 0))
+    assert bus.next_snapshot(-10) is None          # head still missing
+    bus.publish_head(0, {"w": np.ones((3, 2), np.float32)})
+    ver, params, vec, _ = bus.next_snapshot(-10)
+    assert ver == 0 and vec == [0, 0, 0, 0]
+    assert len(params["layers"]) == 3 and "head" in params
+    # content check: every layer really is the version-0 publication
+    for k, lp in enumerate(params["layers"]):
+        assert lp["w"][0, 0] == 0 * 100 + k
+
+
+def test_bus_snapshots_step_in_version_order():
+    bus = WeightBus(1)
+    for v in (2, 0, 1):                            # out-of-order assembly
+        bus.publish_layer(0, v, _layer_piece(0, v))
+    seen, after = [], -10
+    while True:
+        rec = bus.next_snapshot(after)
+        if rec is None:
+            break
+        seen.append(rec[0])
+        after = rec[0]
+    assert seen == [0, 1, 2]                       # oldest-first, one at a time
+
+
+def test_bus_copies_published_trees():
+    """Copy-on-publish: mutating (or donating) the producer's buffer
+    after publication must not reach the parked snapshot."""
+    bus = WeightBus(1)
+    piece = _layer_piece(0, 0)
+    bus.publish_layer(0, 0, piece)
+    piece["layers"][0]["w"][:] = -1.0              # producer clobbers its copy
+    _, params, _, _ = bus.next_snapshot(-10)
+    assert float(params["layers"][0]["w"][0, 0]) == 0.0
+
+
+def test_concurrent_publish_never_yields_torn_snapshot():
+    """The tentpole invariant: a consumer hammering the bus while a
+    producer publishes layer-by-layer never observes a half-published
+    layer set — every snapshot's version vector is uniform AND every
+    layer's content matches its tagged version."""
+    n_layers, n_versions = 3, 12
+    bus = WeightBus(n_layers)
+    stop = threading.Event()
+
+    def producer():
+        for v in range(n_versions):
+            for k in range(n_layers):
+                bus.publish_layer(k, v, _layer_piece(k, v))
+                time.sleep(0.0003)                 # widen the torn window
+        stop.set()
+
+    th = threading.Thread(target=producer)
+    th.start()
+    installed = []
+    after = -10
+    while not (stop.is_set() and bus.next_snapshot(after) is None):
+        rec = bus.next_snapshot(after)
+        if rec is None:
+            continue
+        ver, params, vec, _ = rec
+        assert vec == [ver] * n_layers
+        for k, lp in enumerate(params["layers"]):
+            assert float(lp["w"][0, 0]) == ver * 100 + k, \
+                f"torn snapshot: layer {k} carries the wrong version"
+        installed.append(ver)
+        after = ver
+    th.join()
+    assert installed == sorted(installed)          # monotone
+    assert installed == list(range(n_versions))    # nothing skipped
+
+
+def test_replica_counts_version_vector_violations():
+    r = Replica(10, max_batch=8)
+    params = {"layers": [_layer_piece(0, 0)["layers"][0]]}
+    assert r.install(0, params, [0], time.perf_counter())
+    # non-uniform vector: half-published layer set
+    assert not r.install(1, params, [1, 0], time.perf_counter())
+    # non-monotone: rolling the replica backward
+    assert not r.install(0, params, [0], time.perf_counter())
+    assert r.consistency_violations == 2
+    assert r.version == 0 and len(r.swaps) == 1
+
+
+# ---------------------------------------------------------------------------
+# Queue + batcher: admission control and the batching knobs
+# ---------------------------------------------------------------------------
+
+def _req(i, t=0.0):
+    return Request(id=i, x=np.zeros(4, np.float32), label=0, t_arrival=t)
+
+
+def test_queue_sheds_on_full_and_keeps_fifo_order():
+    q = AdmissionQueue(4)
+    results = [q.offer(_req(i)) for i in range(6)]
+    assert results == [True] * 4 + [False] * 2
+    assert q.stats == {"accepted": 4, "rejected": 2, "depth_peak": 4}
+    assert [r.id for r in q.take(10)] == [0, 1, 2, 3]
+    assert len(q) == 0
+    assert q.offer(_req(9))                        # room again after take
+
+
+def test_batcher_max_batch_and_max_wait():
+    q = AdmissionQueue(64)
+    b = Batcher(max_batch=4, max_wait_s=0.5)
+    for i in range(3):
+        q.offer(_req(i, t=0.0))
+    assert b.form(q, now=0.1) == []                # 3 < 4 and young
+    assert [r.id for r in b.form(q, now=0.6)] == [0, 1, 2]   # head waited
+    for i in range(5):
+        q.offer(_req(10 + i, t=1.0))
+    assert [r.id for r in b.form(q, now=1.0)] == [10, 11, 12, 13]  # full
+    assert b.form(q, now=1.0) == []                # 1 left, young again
+    assert [r.id for r in b.form(q, now=1.0, flush=True)] == [14]
+
+
+# ---------------------------------------------------------------------------
+# Traffic: registry + deterministic replay
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def tiny_source():
+    return data_lib.source_of(data_lib.mnist_like(n_train=64, n_test=256))
+
+
+@pytest.mark.parametrize("name", ["uniform", "zipf", "bursty"])
+def test_traffic_streams_replay_deterministically(tiny_source, name):
+    def grab(seed):
+        s = RequestStream(tiny_source, traffic_registry.get(name),
+                          rate=100.0, seed=seed)
+        return s.take(300)
+
+    a, b, c = grab(7), grab(7), grab(8)
+    assert [t for t, _ in a] == [t for t, _ in b]
+    assert all(ra.label == rb.label and np.array_equal(ra.x, rb.x)
+               for (_, ra), (_, rb) in zip(a, b))
+    # a different seed is a different stream (arrivals or payloads)
+    assert ([t for t, _ in a] != [t for t, _ in c]
+            or any(ra.label != rc.label
+                   for (_, ra), (_, rc) in zip(a, c)))
+    # arrival clock strictly accumulates across take() calls
+    times = [t for t, _ in a]
+    assert all(t2 >= t1 for t1, t2 in zip(times, times[1:]))
+
+
+def test_zipf_traffic_skews_the_class_mix(tiny_source):
+    s = RequestStream(tiny_source, traffic_registry.get("zipf"),
+                      rate=100.0, num_classes=10, seed=0)
+    labels = [r.label for _, r in s.take(2000)]
+    counts = sorted(np.bincount(labels, minlength=10), reverse=True)
+    assert counts[0] > 3 * max(counts[-1], 1)      # head class dominates
+
+
+def test_register_traffic_and_unknown_name():
+    api.register_traffic("test_constant",
+                         lambda rng, n, rate, C: (np.full(n, 1.0 / rate),
+                                                  np.zeros(n, np.int32)))
+    try:
+        assert "test_constant" in api.traffic
+        with pytest.raises(ValueError, match="unknown traffic"):
+            ServeConfig(traffic="no_such_traffic")
+        assert ServeConfig(traffic="test_constant").traffic == "test_constant"
+    finally:
+        traffic_registry.unregister("test_constant")
+
+
+# ---------------------------------------------------------------------------
+# data.Source protocol (ROADMAP item 5 start)
+# ---------------------------------------------------------------------------
+
+def test_prototype_source_task_matches_classic_helpers():
+    src = data_lib.mnist_source(seed=3)
+    t1 = src.task(n_train=128, n_test=32)
+    t2 = data_lib.mnist_like(seed=3, n_train=128, n_test=32)
+    assert np.array_equal(t1.x_train, t2.x_train)
+    assert np.array_equal(t1.y_test, t2.y_test)
+    assert isinstance(src, data_lib.Source)
+
+
+def test_sources_are_pure_functions_of_split_and_seed():
+    for src in (data_lib.mnist_source(0),
+                data_lib.source_of(data_lib.mnist_like(n_train=64,
+                                                       n_test=32))):
+        x1, y1 = src.sample("serve", 16, seed=5)
+        x2, y2 = src.sample("serve", 16, seed=5)
+        assert np.array_equal(x1, x2) and np.array_equal(y1, y2)
+        x3, _ = src.sample("serve", 16, seed=6)
+        x4, _ = src.sample("other", 16, seed=5)
+        assert not np.array_equal(x1, x3)          # seed is an axis
+        assert not np.array_equal(x1, x4)          # split is an axis
+        assert x1.shape == (16, src.dim) and y1.dtype == np.int32
+
+
+# ---------------------------------------------------------------------------
+# Facade plumbing
+# ---------------------------------------------------------------------------
+
+def test_fit_rejects_serve_on_non_executor_backends():
+    cfg = FFMLPConfig(layer_sizes=(784, 32), epochs=2, splits=2,
+                      neg_mode="random", classifier="goodness",
+                      batch_size=64, seed=0)
+    with pytest.raises(ValueError, match="executor"):
+        api.fit(cfg, None, backend="sequential",
+                serve=api.ServeConfig())
+    with pytest.raises(TypeError, match="ServeConfig"):
+        api.fit(cfg, None, backend="executor", serve={"rate": 100})
+    with pytest.raises(ValueError, match="task or"):
+        api.serve(cfg)
+    with pytest.raises(TypeError, match="knob"):
+        api.serve(cfg, data_lib.mnist_like(n_train=64, n_test=32),
+                  bogus_knob=3)
+
+
+def test_launch_serve_shim_warns_and_delegates(monkeypatch):
+    from repro.launch import serve as launch_serve
+
+    seen = {}
+    monkeypatch.setattr(launch_serve, "lm_decode",
+                        lambda cfg, **kw: seen.update(kw) or "sentinel")
+    with pytest.warns(DeprecationWarning, match="lm_decode"):
+        out = launch_serve.serve(None, batch=2, prompt_len=8, gen=4)
+    assert out == "sentinel" and seen["batch"] == 2
+
+
+# ---------------------------------------------------------------------------
+# E2E: train-while-serve
+# ---------------------------------------------------------------------------
+
+def test_train_while_serve_e2e_smoke():
+    """The acceptance-criteria invariants on a single device: at least
+    one completed hot-swap per chapter, zero consistency violations,
+    request accuracy IMPROVES across the swap timeline, and live
+    publication leaves the training weight stream bit-exact."""
+    task = data_lib.mnist_like(n_train=2560, n_test=400)
+    cfg = FFMLPConfig(layer_sizes=(784, 256, 256), epochs=100, splits=4,
+                      neg_mode="random", classifier="goodness",
+                      batch_size=64, seed=0)
+    res = api.serve(cfg, task, traffic="zipf", schedule="sequential",
+                    num_nodes=1, rate=300.0, max_batch=64, seed=1)
+
+    assert res.slo["consistency_violations"] == 0
+    # init snapshot (-1) + one per completed chapter
+    swap_versions = [s["version"] for s in res.swaps]
+    assert swap_versions == [-1] + list(range(cfg.splits))
+    assert res.slo["requests"] > 0
+    assert all(s["staleness_s"] >= 0 for s in res.swaps)
+
+    # accuracy-vs-time: the last-version window must beat the
+    # untrained (-1) window decisively (chance is 0.1)
+    curve = res.accuracy_by_version
+    first, last = min(curve), max(curve)
+    assert last == cfg.splits - 1
+    assert curve[last]["n"] >= 64                  # final_probe window
+    assert curve[last]["accuracy"] > curve[first]["accuracy"] + 0.2
+    assert curve[last]["accuracy"] > 0.4
+
+    # per-request records carry the full lifecycle
+    r0 = res.records[0]
+    assert {"id", "t_arrival", "t_done", "latency", "version", "pred",
+            "label", "correct"} <= set(r0)
+    assert res.timings["train_s"] > 0 and res.timings["serve_s"] > 0
+
+    # publication is read-only: same weight stream as plain training
+    ref = api.fit(cfg, task)                       # sequential trainer
+    assert pff_exec.params_bit_equal(ref.params, res.fit.params)
+    assert res.fit.serve is res
+    assert res.fit.test_acc == ref.test_acc
+
+
+def test_serve_static_replays_bit_identically():
+    """Serve-only mode: same params + same ServeConfig seed => the same
+    request ids, labels and predictions, regardless of wall clock."""
+    task = data_lib.mnist_like(n_train=512, n_test=256)
+    cfg = FFMLPConfig(layer_sizes=(784, 64), epochs=2, splits=2,
+                      neg_mode="random", classifier="goodness",
+                      batch_size=64, seed=0)
+    params = api.fit(cfg, task).params
+
+    def run():
+        r = api.serve(cfg, task, params=params, traffic="bursty",
+                      n_requests=192, seed=5, rate=2000.0)
+        return [(x["id"], x["label"], x["pred"]) for x in r.records]
+
+    a, b = run(), run()
+    assert a == b and len(a) == 192
+
+
+def test_engine_summarize_counts_sheds():
+    """A rate far above what max_wait admits per tick must shed: the
+    queue capacity bounds memory and the SLO block reports the drop."""
+    task = data_lib.mnist_like(n_train=256, n_test=128)
+    cfg = FFMLPConfig(layer_sizes=(784, 32), epochs=2, splits=2,
+                      neg_mode="random", classifier="goodness",
+                      batch_size=64, seed=0)
+    params = api.fit(cfg, task).params
+    res = api.serve(cfg, task, params=params, traffic="uniform",
+                    n_requests=256, rate=1e6, max_batch=16,
+                    queue_cap=32, seed=0)
+    slo = res.slo
+    # every scored request was an accepted one; the burst beyond the
+    # queue capacity was shed, not buffered
+    assert slo["requests"] == slo["accepted"]
+    assert slo["accepted"] + slo["rejected"] == 256
+    assert slo["rejected"] > 0 and slo["shed_rate"] > 0.0
+    assert slo["queue_depth_peak"] <= 32
+    assert slo["latency_p99_ms"] >= slo["latency_p50_ms"]
+    raw = res.raw
+    assert isinstance(raw, serve_engine.EngineResult)
