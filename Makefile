@@ -1,6 +1,6 @@
 PY := PYTHONPATH=src python
 
-.PHONY: test lint bench bench-smoke pff-exec-smoke fault-smoke api-smoke serve-smoke
+.PHONY: test lint bench bench-smoke tune-smoke pff-exec-smoke fault-smoke api-smoke serve-smoke
 
 test:
 	$(PY) -m pytest -q
@@ -22,6 +22,16 @@ api-smoke:
 bench-smoke:
 	$(PY) -m benchmarks.run --only=ff_hotloop
 	$(PY) -m benchmarks.run --only=kernels
+
+# Autotuner gate: tiny measure-many/pick-fastest sweep into a repo-local
+# table (REPRO_TUNE_TABLE keeps ~/.cache clean), then asserts the table
+# was written, a re-lookup is a pure in-memory memo hit, every winner
+# honors the 1e-4 oracle budget, and a poisoned entry falls back to
+# default blocks with a warning. Writes BENCH_kernel_tune.json with
+# winners as %-of-roofline. Exits non-zero on any breach.
+tune-smoke:
+	REPRO_TUNE_TABLE=$(CURDIR)/.tune/tune_table.json \
+		$(PY) -m benchmarks.run --only=tune
 
 # Real multi-device PFF executor on 4 faked host devices: measured vs
 # simulator-predicted speedup (BENCH_pff_exec.json) + weight-stream

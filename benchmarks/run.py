@@ -4,6 +4,7 @@ Sections (one per paper table/figure + framework-level):
   1. paper tables 1-5 analogues (FF/PFF accuracy + schedule times)
   2. FF vs backprop on the synthetic LM (framework substrate)
   3. kernel validation sweep (Pallas vs oracle, interpret mode)
+  3b. kernel autotuner sweep + table smoke (writes BENCH_kernel_tune.json)
   4. roofline table from the dry-run records (if present)
   5. FF hot-loop perf baseline (writes BENCH_ff_hotloop.json)
 
@@ -25,7 +26,8 @@ ERR_BUDGET = 1e-4
 
 
 SECTIONS = ("tables", "lm", "lm_schedules", "lm_negatives", "kernels",
-            "roofline", "ff_hotloop", "pff_exec", "pff_faults", "serve")
+            "tune", "roofline", "ff_hotloop", "pff_exec", "pff_faults",
+            "serve")
 
 
 def main(argv):
@@ -80,6 +82,13 @@ def main(argv):
         if worst > ERR_BUDGET:
             failures.append(f"kernel sweep max_err {worst:.2e} > "
                             f"{ERR_BUDGET:.0e}")
+
+    if only in (None, "tune"):
+        print("\n##### 3b. Kernel autotuner (measure-many, pick-fastest "
+              "+ table smoke) #####")
+        from benchmarks import kernels as kbench
+        res = kbench.run_tune(quick=not full)
+        failures.extend(res["failures"])
 
     if only in (None, "roofline"):
         print("\n##### 4. Roofline (from dry-run records) #####")

@@ -66,6 +66,7 @@ from typing import List, Optional
 
 from repro import data as data_lib
 from repro.core import ff_mlp, pff, pff_exec, strategies
+from repro.kernels import registry as kernel_registry
 from repro.core.faults import (              # re-exported resilience surface
     FaultPlan, ResilienceConfig,
 )
@@ -143,6 +144,12 @@ def _validate_strategies(cfg):
     good = strategies.goodness.get(cfg.goodness_fn)
     strategies.negatives.get(cfg.neg_mode)
     cls = strategies.classifier.get(cfg.classifier)
+    impl = ff_mlp.kernel_impl(cfg)
+    if impl != "auto":
+        # source-of-truth'd from the kernel impl registry, like the
+        # strategy names above — a typo'd kernel_impl fails here, not
+        # deep inside the first jitted chapter
+        kernel_registry.ff_dense.get(impl)
     if cls.requires_goodness and cfg.goodness_fn != cls.requires_goodness:
         raise ValueError(
             f"classifier {cfg.classifier!r} reads parameters trained by "

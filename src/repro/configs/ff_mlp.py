@@ -19,7 +19,11 @@ class FFMLPConfig:
     classifier: str = "goodness"    # goodness | softmax
     goodness_fn: str = "sumsq"      # sumsq | perf_opt (Performance-Optimized)
     peer_w: float = 0.0             # Hinton's peer-normalization weight
-    kernel_impl: str = "auto"       # auto | pallas | ref (ops.ff_dense)
+    kernel_impl: str = "auto"       # ops.FF_DENSE_IMPLS — "auto" plus the
+    #                                 kernel impl registry's names
+    #                                 (kernels.registry; validated by
+    #                                 api.fit). "auto" consults the
+    #                                 autotuner's tuning table first.
     seed: int = 0
 
 

@@ -1032,10 +1032,16 @@ def _case_setup(splits, n_train, neg_mode, classifier, goodness_fn):
     from repro.configs.ff_mlp import FFMLPConfig
 
     task = data_lib.mnist_like(n_train=n_train, n_test=200)
+    # kernel_impl pinned to "ref": this matrix promises BIT-exactness,
+    # and a populated tuning table may legitimately steer impl="auto"
+    # onto a Pallas block shape whose float summation order differs.
+    # The tuned path is gated on the 1e-4 oracle error instead (see
+    # kernels.autotune.TABLE_META) — pinning keeps this gate green with
+    # tuning on or off.
     cfg = FFMLPConfig(layer_sizes=(784, 128, 128), epochs=splits * 2,
                       splits=splits, neg_mode=neg_mode,
                       classifier=classifier, goodness_fn=goodness_fn,
-                      batch_size=64, seed=0)
+                      batch_size=64, kernel_impl="ref", seed=0)
     return cfg, task
 
 

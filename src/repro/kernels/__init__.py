@@ -11,12 +11,23 @@
   mamba2_ssd      — chunked SSD dual-form scan (intra-chunk quadratic +
                     carried state) for Mamba-2.
 
-Each kernel ships as <name>.py (pl.pallas_call + BlockSpec), ops.py
-(jit'd dispatch wrapper), ref.py (pure-jnp oracle). The FF-MLP model
-code now calls the fused path for real: ``repro.core.ff_mlp`` trains and
-predicts through ``ops.ff_dense`` with a config-driven
-``kernel_impl: auto | pallas | ref`` switch (auto = Pallas on TPU,
-oracle on CPU; Pallas runs under interpret=True off-TPU). The kernels
-are validated against the oracles in tests/ and gated to <= 1e-4 by
-``benchmarks/run.py``.
+Each kernel ships as <name>.py (pl.pallas_call + BlockSpec) plus a
+pure-jnp oracle in ref.py. Dispatch is a two-layer system:
+
+  registry.py — named impls per op with platform predicates; new
+                backends (e.g. a Pallas-Triton GPU lowering) are
+                registered, not patched into an if-chain.
+  autotune.py — measure-many/pick-fastest block-shape tuner with a
+                persisted JSON tuning table (REPRO_TUNE_TABLE), gated
+                on the 1e-4 oracle error.
+  ops.py      — the jit-friendly entry points model code calls, with a
+                shared ``impl="auto" | <registered name>`` contract;
+                "auto" resolves through the tuning table then the
+                registry's platform default.
+
+The FF-MLP model code calls the fused path for real: ``repro.core.
+ff_mlp`` trains and predicts through ``ops.ff_dense`` with the
+config-driven ``kernel_impl`` switch (Pallas runs under interpret=True
+off-TPU). The kernels are validated against the oracles in tests/ and
+gated to <= 1e-4 by ``benchmarks/run.py``.
 """

@@ -45,6 +45,29 @@ from jax.experimental import pallas as pl
 # ff_mlp._norm, so the kernel and XLA paths divide by the same number.
 NORM_EPS = 1e-8
 
+# Per-grid-step VMEM budget the autotuner's candidate filter enforces:
+# half of a v5e core's ~16 MB, leaving headroom for Pallas's automatic
+# input double-buffering. A candidate (bm, bn) whose resident blocks
+# exceed this is never benchmarked — in particular the norm=True path,
+# whose j-constant index map keeps the whole (bm, N) y row block
+# resident across the inner sweep (the documented consecutive-revisit
+# guarantee; an evicted block would make the epilogue divide undefined).
+VMEM_BUDGET_BYTES = 8 * 2 ** 20
+
+
+def vmem_block_bytes(K, N, bm, bn, *, norm=False, dtype_bytes=4):
+    """Resident VMEM bytes of one forward grid step for blocks (bm, bn).
+
+    The single source of truth for the autotuner's candidate filter:
+    x (bm, K) + w (K, bn) + b (bn,) + the y output block + the (bm,)
+    goodness accumulator. With ``norm=True`` the y block is the WHOLE
+    (bm, Np) row (j-constant index map, see module docstring) — this is
+    the VMEM row-residency invariant every tuned candidate must honor.
+    """
+    np_ = -(-N // bn) * bn if bn else N          # padded N
+    y_cols = np_ if norm else bn
+    return (bm * K + K * bn + bn + bm * y_cols) * dtype_bytes + bm * 4
+
 
 def _tile_y_g(x_ref, w_ref, b_ref, g_ref, j):
     """The shared per-(i, j) compute: (bm, bn) activation tile plus the

@@ -116,25 +116,49 @@ def ff_dense_bwd(x, w, y, dy_out, dg, *, bm=128, bk=256, interpret=True):
     return dx[:M, :K], dw[:K, :N], db[:N]
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
-def ff_dense_vjp(x, w, b, interpret=True):
+def _split_blocks(blocks):
+    """Tuned block shapes -> (forward kwargs, backward kwargs).
+
+    ``blocks`` is None (kernel defaults) or an autotuner-shaped
+    ``(bm, bn, bk)`` tuple with None holes meaning "default": bm/bn tile
+    the forward grid, bm/bk the backward one (the backward streams N
+    whole, so bn never reaches it; the forward streams K whole, so bk
+    never reaches it — see each kernel's docstring).
+    """
+    if blocks is None:
+        return {}, {}
+    bm, bn, bk = blocks
+    fwd = {k: v for k, v in (("bm", bm), ("bn", bn)) if v}
+    bwd = {k: v for k, v in (("bm", bm), ("bk", bk)) if v}
+    return fwd, bwd
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4))
+def ff_dense_vjp(x, w, b, interpret=True, blocks=None):
     """Differentiable fused FF layer. Returns (y (M, N), goodness (M,)).
 
-    ``interpret`` must be passed positionally (custom_vjp nondiff arg);
-    use True everywhere except on a real TPU.
+    ``interpret`` and ``blocks`` must be passed positionally (custom_vjp
+    nondiff args); use interpret=True everywhere except on a real TPU.
+    ``blocks`` is an optional autotuned ``(bm, bn, bk)`` tuple (from
+    ``kernels.autotune``) applied to BOTH the forward and the fused
+    backward kernel; None means the MXU-aligned defaults.
     """
-    return _ff_dense_fwd(x, w, b, interpret=interpret)
+    fwd_kw, _ = _split_blocks(blocks)
+    return _ff_dense_fwd(x, w, b, interpret=interpret, **fwd_kw)
 
 
-def _ff_dense_vjp_fwd(x, w, b, interpret):
-    y, g = _ff_dense_fwd(x, w, b, interpret=interpret)
+def _ff_dense_vjp_fwd(x, w, b, interpret, blocks):
+    fwd_kw, _ = _split_blocks(blocks)
+    y, g = _ff_dense_fwd(x, w, b, interpret=interpret, **fwd_kw)
     return (y, g), (x, w, b, y)
 
 
-def _ff_dense_vjp_bwd(interpret, res, cts):
+def _ff_dense_vjp_bwd(interpret, blocks, res, cts):
     x, w, b, y = res
     dy_out, dg = cts
-    dx, dw, db = ff_dense_bwd(x, w, y, dy_out, dg, interpret=interpret)
+    _, bwd_kw = _split_blocks(blocks)
+    dx, dw, db = ff_dense_bwd(x, w, y, dy_out, dg, interpret=interpret,
+                              **bwd_kw)
     return dx, dw, db.astype(b.dtype)
 
 
@@ -170,23 +194,31 @@ ff_dense_vjp.defvjp(_ff_dense_vjp_fwd, _ff_dense_vjp_bwd)
 # only differ on rows where the oracle has no usable gradient at all.
 # ---------------------------------------------------------------------------
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
-def ff_dense_norm_vjp(x, w, b, interpret=True):
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4))
+def ff_dense_norm_vjp(x, w, b, interpret=True, blocks=None):
     """Differentiable fused FF layer WITH the in-kernel norm epilogue.
     Returns (yn (M, N) length-normalized, RAW goodness (M,)).
 
-    ``interpret`` must be passed positionally (custom_vjp nondiff arg);
-    use True everywhere except on a real TPU.
+    ``interpret`` and ``blocks`` must be passed positionally (custom_vjp
+    nondiff args); use interpret=True everywhere except on a real TPU.
+    ``blocks`` as in ``ff_dense_vjp`` — every candidate the autotuner
+    offers here already passed the VMEM row-residency filter
+    (``ff_dense.vmem_block_bytes``), since norm=True keeps the whole
+    (bm, N) row block resident across the inner sweep.
     """
-    return _ff_dense_fwd(x, w, b, interpret=interpret, norm=True)
+    fwd_kw, _ = _split_blocks(blocks)
+    return _ff_dense_fwd(x, w, b, interpret=interpret, norm=True,
+                         **fwd_kw)
 
 
-def _ff_dense_norm_vjp_fwd(x, w, b, interpret):
-    yn, g = _ff_dense_fwd(x, w, b, interpret=interpret, norm=True)
+def _ff_dense_norm_vjp_fwd(x, w, b, interpret, blocks):
+    fwd_kw, _ = _split_blocks(blocks)
+    yn, g = _ff_dense_fwd(x, w, b, interpret=interpret, norm=True,
+                          **fwd_kw)
     return (yn, g), (x, w, b, yn, g)
 
 
-def _ff_dense_norm_vjp_bwd(interpret, res, cts):
+def _ff_dense_norm_vjp_bwd(interpret, blocks, res, cts):
     x, w, b, yn, g = res
     dyn, dg_ct = cts
     s = jnp.sqrt(g)
@@ -196,8 +228,9 @@ def _ff_dense_norm_vjp_bwd(interpret, res, cts):
     rowdot = jnp.sum(dyn * yn, axis=-1) * scale      # = dyn . y
     dg_eff = dg_ct - rowdot * u * u / (2.0 * s)
     dy_out_eff = dyn * u[:, None]
+    _, bwd_kw = _split_blocks(blocks)
     dx, dw, db = ff_dense_bwd(x, w, y, dy_out_eff, dg_eff,
-                              interpret=interpret)
+                              interpret=interpret, **bwd_kw)
     return dx, dw, db.astype(b.dtype)
 
 

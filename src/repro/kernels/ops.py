@@ -1,72 +1,125 @@
-"""Dispatch layer: TPU -> Pallas kernel, anything else -> jnp oracle.
+"""Dispatch layer: registry-resolved kernel impls + autotuned blocks.
 
-Model code imports from here; tests cross-validate both paths. On this
-CPU container the Pallas path runs in interpret mode; on a real TPU it
-compiles to Mosaic. ``ff_dense`` is fully differentiable on both paths
-(the Pallas path carries a fused custom_vjp backward kernel) and is the
-engine of the FF-MLP training hot loop — select the path with
-``impl="auto" | "pallas" | "ref"`` (``FFMLPConfig.kernel_impl``).
+Model code imports from here; tests cross-validate the paths. All three
+ops share one ``impl=`` contract, resolved through the kernel impl
+registry (``kernels.registry`` — new backends are registrations, not
+patches here):
+
+  impl="auto"    the tuning table's measured-fastest impl for this
+                 shape bucket when one is recorded (``ff_dense`` only —
+                 see ``kernels.autotune``; populate it with
+                 ``make tune-smoke`` / ``benchmarks.run --only=tune``),
+                 else the registry's platform default (Pallas on TPU,
+                 the jnp oracle elsewhere).
+  impl="pallas"  force the fused kernel (interpret mode off-TPU), with
+                 tuned block shapes if the table has them.
+  impl="ref"     force the jnp oracle — the bit-exactness anchor (the
+                 pff-exec weight-stream matrix pins this).
+  impl=<custom>  anything registered via
+                 ``registry.register_kernel_impl``.
+
+Unknown impls raise a ``ValueError`` listing the registered choices.
+``ff_dense`` is fully differentiable on every builtin path (the Pallas
+path carries a fused custom_vjp backward kernel, which tuned block
+shapes reach too) and is the engine of the FF-MLP training hot loop
+(``FFMLPConfig.kernel_impl``). The legacy ``force_pallas=`` kwarg warns
+``DeprecationWarning`` and delegates to ``impl="pallas"``.
 """
 from __future__ import annotations
 
+import warnings
+
 import jax
 
-from repro.kernels import ref
-from repro.kernels.ff_dense_vjp import (
-    ff_dense_norm_vjp as _ff_dense_norm_vjp,
-    ff_dense_vjp as _ff_dense_vjp,
-)
-from repro.kernels.flash_attention import flash_attention as _flash_pallas
-from repro.kernels.mamba2_ssd import mamba2_ssd as _ssd_pallas
+from repro.kernels import autotune, registry
 
 
-def _on_tpu():
-    return jax.default_backend() == "tpu"
+def _platform():
+    return jax.default_backend()
 
 
-# the valid ``impl`` values for ff_dense — CLI --kernel-impl choices
-# come from here so help text tracks the dispatcher
-FF_DENSE_IMPLS = ("auto", "pallas", "ref")
+def _interpret():
+    return _platform() != "tpu"
 
 
-def ff_dense(x, w, b, *, impl="auto", norm=False, force_pallas=False):
+def _legacy_force_pallas(op, force_pallas, impl):
+    """The deprecated boolean spelling of ``impl="pallas"``."""
+    if force_pallas is None:
+        return impl
+    warnings.warn(
+        f"ops.{op}(force_pallas=...) is deprecated; pass impl='pallas' "
+        f"(or leave impl='auto' to let the kernel registry and tuning "
+        f"table pick)", DeprecationWarning, stacklevel=3)
+    return "pallas" if force_pallas else impl
+
+
+def __getattr__(name):
+    # live views of the registries, so CLI choices and error messages
+    # track custom registrations (PEP 562 module __getattr__)
+    if name == "FF_DENSE_IMPLS":
+        return registry.ff_dense.choices()
+    if name == "FLASH_ATTENTION_IMPLS":
+        return registry.flash_attention.choices()
+    if name == "MAMBA2_SSD_IMPLS":
+        return registry.mamba2_ssd.choices()
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+
+def ff_dense(x, w, b, *, impl="auto", norm=False, force_pallas=None):
     """Fused (or reference) y = relu(x @ w + b), g = sum(y^2, -1).
 
-    impl: "auto" picks Pallas on TPU and the jnp oracle elsewhere;
-    "pallas" forces the fused kernel (interpret mode off-TPU); "ref"
-    forces the oracle. ``force_pallas=True`` is the legacy spelling of
-    impl="pallas". Differentiable under jax.grad on every path.
+    impl: see the module docstring — "auto" consults the persisted
+    tuning table per (M, K, N, dtype, platform, norm) bucket at trace
+    time, so a populated table makes "auto" mean "fastest measured
+    correct impl on this platform". Differentiable under jax.grad on
+    every builtin path.
 
     norm=True: y is returned length-normalized (Hinton's inter-layer
     hand-off) — on the Pallas path the divide runs in the kernel
     epilogue, on the ref path in the jnp oracle; g stays the RAW
     pre-norm goodness on both.
     """
-    if force_pallas:
-        impl = "pallas"
+    impl = _legacy_force_pallas("ff_dense", force_pallas, impl)
+    M, K = x.shape
+    N = w.shape[1]
+    blocks = None
     if impl == "auto":
-        impl = "pallas" if _on_tpu() else "ref"
-    if impl == "pallas":
-        fused = _ff_dense_norm_vjp if norm else _ff_dense_vjp
-        return fused(x, w, b, not _on_tpu())
-    if impl != "ref":
-        raise ValueError(f"unknown ff_dense impl {impl!r}; expected one "
-                         f"of {' | '.join(FF_DENSE_IMPLS)}")
-    if norm:
-        return ref.ff_dense_norm_ref(x, w, b)
-    return ref.ff_dense_ref(x, w, b)
+        entry = autotune.lookup("ff_dense", M, K, N, x.dtype,
+                                _platform(), norm=norm)
+        if entry is not None:
+            impl = entry["impl"]
+            blocks = autotune.entry_blocks(entry)
+        else:
+            impl = registry.ff_dense.resolve(_platform()).name
+    elif registry.ff_dense.get(impl).tunable:
+        # a forced tunable impl still benefits from tuned block shapes
+        entry = autotune.lookup("ff_dense", M, K, N, x.dtype,
+                                _platform(), norm=norm)
+        if entry is not None:
+            blocks = autotune.entry_blocks(entry)
+    kimpl = registry.ff_dense.get(impl)
+    return kimpl.fn(x, w, b, norm=norm, interpret=_interpret(),
+                    blocks=blocks)
 
 
-def flash_attention(q, k, v, *, causal=True, window=None,
-                    force_pallas=False):
-    if _on_tpu() or force_pallas:
-        return _flash_pallas(q, k, v, causal=causal, window=window,
-                             interpret=not _on_tpu())
-    return ref.flash_attention_ref(q, k, v, causal=causal, window=window)
+def flash_attention(q, k, v, *, causal=True, window=None, impl="auto",
+                    force_pallas=None):
+    """Blockwise attention through the impl registry (same ``impl=``
+    contract as ``ff_dense``; "auto" = platform default)."""
+    impl = _legacy_force_pallas("flash_attention", force_pallas, impl)
+    if impl == "auto":
+        impl = registry.flash_attention.resolve(_platform()).name
+    kimpl = registry.flash_attention.get(impl)
+    return kimpl.fn(q, k, v, causal=causal, window=window,
+                    interpret=_interpret())
 
 
-def mamba2_ssd(xbar, dA, b, c, *, chunk=128, force_pallas=False):
-    if _on_tpu() or force_pallas:
-        return _ssd_pallas(xbar, dA, b, c, chunk=chunk,
-                           interpret=not _on_tpu())
-    return ref.mamba2_ssd_ref(xbar, dA, b, c)
+def mamba2_ssd(xbar, dA, b, c, *, chunk=128, impl="auto",
+               force_pallas=None):
+    """Chunked SSD scan through the impl registry (same ``impl=``
+    contract as ``ff_dense``; "auto" = platform default)."""
+    impl = _legacy_force_pallas("mamba2_ssd", force_pallas, impl)
+    if impl == "auto":
+        impl = registry.mamba2_ssd.resolve(_platform()).name
+    kimpl = registry.mamba2_ssd.get(impl)
+    return kimpl.fn(xbar, dA, b, c, chunk=chunk, interpret=_interpret())

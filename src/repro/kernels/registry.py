@@ -1,0 +1,201 @@
+"""Kernel impl registry: named implementations per op, with platform
+predicates — the dispatch substrate behind ``ops.ff_dense`` /
+``ops.flash_attention`` / ``ops.mamba2_ssd``.
+
+This is the same pattern ``core.strategies`` established for
+negatives/goodness/classifier, applied one level down: instead of a
+string-``if`` chain per op ("TPU -> Pallas, else oracle"), each op owns
+a small registry of named impls, and new backends (a Pallas-Triton GPU
+lowering, a hand-written Mosaic variant, a vendor library call) are
+REGISTRATIONS, not patches to the dispatcher:
+
+    from repro.kernels import registry
+    registry.register_kernel_impl(
+        "ff_dense", "triton", my_fn,
+        preferred=lambda platform: platform == "gpu", tunable=True)
+    # ops.ff_dense(impl="triton") and --kernel-impl triton now work,
+    # and impl="auto" prefers it on GPU.
+
+Impl callable contracts (keyword-only after the operands):
+
+  ff_dense:        fn(x, w, b, *, norm, interpret, blocks) -> (y, g)
+  flash_attention: fn(q, k, v, *, causal, window, interpret) -> o
+  mamba2_ssd:      fn(xbar, dA, b, c, *, chunk, interpret) -> (y, hT)
+
+``interpret`` is True off-TPU (Pallas interpret mode); non-Pallas impls
+ignore it. ``blocks`` is an autotuned ``(bm, bn, bk)`` tuple or None
+(see ``kernels.autotune``); impls without tunable block shapes ignore
+it. Every registry carries a ``fallback`` impl (the jnp oracle) that
+``"auto"`` resolves to when no registered impl prefers the current
+platform — the nebullvm-style graceful degradation: "auto" always means
+a CORRECT impl, and the tuning table (consulted by ``ops``, not here)
+upgrades it to the fastest MEASURED one.
+
+Resolution order for ``"auto"``: registration order, first impl whose
+``preferred(platform)`` is True, else the fallback. Unknown impl names
+raise ``ValueError`` listing the registered choices (the same helpful
+error for all three ops — previously only ``ff_dense`` had it).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+from repro.kernels import ref
+from repro.kernels.ff_dense_vjp import ff_dense_norm_vjp, ff_dense_vjp
+from repro.kernels.flash_attention import flash_attention as _flash_pallas
+from repro.kernels.mamba2_ssd import mamba2_ssd as _ssd_pallas
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelImpl:
+    """One named implementation of an op.
+
+    preferred(platform) drives ``"auto"``: True means this impl is the
+    platform's native fast path (e.g. Pallas on TPU). An impl can be
+    available-but-not-preferred (Pallas runs anywhere via interpret
+    mode, but "auto" only picks it on TPU).
+    tunable: participates in the autotuner's block-shape sweep (its fn
+    honors the ``blocks`` kwarg).
+    """
+    name: str
+    fn: Callable
+    preferred: Callable[[str], bool]
+    tunable: bool = False
+
+
+class KernelRegistry:
+    """name -> KernelImpl for one op, with ``"auto"`` resolution."""
+
+    def __init__(self, op: str, fallback: Optional[str] = None):
+        self.op = op
+        self.fallback = fallback
+        self._entries = {}
+
+    def register(self, name, fn, *, preferred=None, tunable=False,
+                 overwrite=False):
+        if name == "auto":
+            raise ValueError(f"'auto' is the {self.op} resolver keyword, "
+                             "not a registrable impl name")
+        if not overwrite and name in self._entries:
+            raise ValueError(
+                f"{self.op} impl {name!r} already registered "
+                "(pass overwrite=True to replace)")
+        if preferred is None:
+            preferred = lambda platform: False          # noqa: E731
+        impl = KernelImpl(name, fn, preferred, tunable)
+        self._entries[name] = impl
+        return impl
+
+    def unregister(self, name):
+        """Remove an impl (no-op if absent) — tests and experiments."""
+        self._entries.pop(name, None)
+
+    def get(self, name) -> KernelImpl:
+        try:
+            return self._entries[name]
+        except KeyError:
+            raise ValueError(
+                f"unknown {self.op} impl {name!r}; expected one of "
+                f"{' | '.join(self.choices())}") from None
+
+    def resolve(self, platform) -> KernelImpl:
+        """``"auto"``: first registered impl preferring ``platform``,
+        else the fallback oracle."""
+        for impl in self._entries.values():
+            if impl.preferred(platform):
+                return impl
+        return self.get(self.fallback)
+
+    def names(self):
+        return tuple(sorted(self._entries))
+
+    def choices(self):
+        """Valid ``impl=`` strings — what CLIs and error messages show."""
+        return ("auto",) + self.names()
+
+    def tunable_names(self):
+        return tuple(n for n in self.names() if self._entries[n].tunable)
+
+    def __contains__(self, name):
+        return name in self._entries
+
+    def __iter__(self):
+        return iter(self.names())
+
+
+ff_dense = KernelRegistry("ff_dense", fallback="ref")
+flash_attention = KernelRegistry("flash_attention", fallback="ref")
+mamba2_ssd = KernelRegistry("mamba2_ssd", fallback="ref")
+
+REGISTRIES = {
+    "ff_dense": ff_dense,
+    "flash_attention": flash_attention,
+    "mamba2_ssd": mamba2_ssd,
+}
+
+
+def registry(op) -> KernelRegistry:
+    try:
+        return REGISTRIES[op]
+    except KeyError:
+        raise ValueError(f"unknown op {op!r}; expected one of "
+                         f"{' | '.join(sorted(REGISTRIES))}") from None
+
+
+def register_kernel_impl(op, name, fn, *, preferred=None, tunable=False,
+                         overwrite=False):
+    """Public hook: plug a new kernel impl into an op's dispatch."""
+    return registry(op).register(name, fn, preferred=preferred,
+                                 tunable=tunable, overwrite=overwrite)
+
+
+# ---------------------------------------------------------------------------
+# Builtin impls. Registration order matters for "auto": the Pallas
+# kernels are the TPU-preferred fast path, the jnp oracles the
+# everywhere-fallback (and the autotuner's correctness reference).
+# ---------------------------------------------------------------------------
+
+def _on_tpu(platform):
+    return platform == "tpu"
+
+
+def _ff_dense_pallas(x, w, b, *, norm, interpret, blocks):
+    fused = ff_dense_norm_vjp if norm else ff_dense_vjp
+    return fused(x, w, b, interpret, blocks)
+
+
+def _ff_dense_ref(x, w, b, *, norm, interpret, blocks):
+    del interpret, blocks
+    if norm:
+        return ref.ff_dense_norm_ref(x, w, b)
+    return ref.ff_dense_ref(x, w, b)
+
+
+def _flash_attention_pallas(q, k, v, *, causal, window, interpret):
+    return _flash_pallas(q, k, v, causal=causal, window=window,
+                         interpret=interpret)
+
+
+def _flash_attention_ref(q, k, v, *, causal, window, interpret):
+    del interpret
+    return ref.flash_attention_ref(q, k, v, causal=causal, window=window)
+
+
+def _mamba2_ssd_pallas(xbar, dA, b, c, *, chunk, interpret):
+    return _ssd_pallas(xbar, dA, b, c, chunk=chunk, interpret=interpret)
+
+
+def _mamba2_ssd_ref(xbar, dA, b, c, *, chunk, interpret):
+    del chunk, interpret
+    return ref.mamba2_ssd_ref(xbar, dA, b, c)
+
+
+ff_dense.register("pallas", _ff_dense_pallas, preferred=_on_tpu,
+                  tunable=True)
+ff_dense.register("ref", _ff_dense_ref)
+flash_attention.register("pallas", _flash_attention_pallas,
+                         preferred=_on_tpu)
+flash_attention.register("ref", _flash_attention_ref)
+mamba2_ssd.register("pallas", _mamba2_ssd_pallas, preferred=_on_tpu)
+mamba2_ssd.register("ref", _mamba2_ssd_ref)

@@ -130,8 +130,11 @@ def main():
                     choices=list(api.goodness.names()))
     ap.add_argument("--kernel-impl", default="auto",
                     choices=list(ops.FF_DENSE_IMPLS),
-                    help="ops.ff_dense path: auto (Pallas on TPU, "
-                         "oracle elsewhere), pallas, or ref")
+                    help="ops.ff_dense impl (choices live from the "
+                         "kernel registry): auto = the tuning table's "
+                         "measured winner per shape when populated "
+                         "(make tune-smoke / REPRO_TUNE_TABLE), else "
+                         "the platform default")
     ap.add_argument("--nodes", type=int, default=4)
     ap.add_argument("--hidden", type=int, default=500)
     ap.add_argument("--layers", type=int, default=4)

@@ -7,3 +7,18 @@ import pytest
 @pytest.fixture(scope="session")
 def key():
     return jax.random.PRNGKey(0)
+
+
+@pytest.fixture(autouse=True)
+def _isolated_tune_table(tmp_path, monkeypatch):
+    """Point the kernel tuning table at a per-test empty path, so a
+    developer's populated ~/.cache table cannot steer impl="auto" and
+    change what the suite measures. Tests that want a table tune into
+    this path (or set their own REPRO_TUNE_TABLE)."""
+    from repro.kernels import autotune
+
+    monkeypatch.setenv("REPRO_TUNE_TABLE",
+                       str(tmp_path / "tune_table.json"))
+    autotune.invalidate_cache()
+    yield
+    autotune.invalidate_cache()

@@ -116,6 +116,53 @@ def test_norm_epilogue_grad_matches_oracle(M, K, N, key):
     np.testing.assert_allclose(gxf, gxr, rtol=1e-4, atol=1e-6)
 
 
+# ---------------------------------------------------------------------------
+# Tuned block shapes through the custom_vjp: the autotuner hands
+# (bm, bn, bk) tuples down both fused paths — gradients must match the
+# oracle for ANY legal blocks, not just the defaults, on
+# non-tile-aligned shapes (the padded row/column edge cases).
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("blocks", [None, (32, 128, 64), (64, 256, 128),
+                                    (16, 128, 256)])
+def test_tuned_blocks_grad_matches_oracle(blocks, key):
+    M, K, N = 100, 333, 257          # deliberately not tile-aligned
+    fused = _stacked_ff_loss(
+        lambda x, w, b: ff_dense_vjp(x, w, b, True, blocks))
+    kx, kw = jax.random.split(key)
+    x = jax.random.normal(kx, (M, K), jnp.float32)
+    lp = {"w": jax.random.normal(kw, (K, N), jnp.float32) * K ** -0.5,
+          "b": jnp.full((N,), 0.1, jnp.float32)}
+    gf, gxf = jax.grad(fused, argnums=(0, 1))(lp, x, 2.0, 0.3)
+    gr, gxr = jax.grad(_ORACLE, argnums=(0, 1))(lp, x, 2.0, 0.3)
+    np.testing.assert_allclose(gf["w"], gr["w"], rtol=1e-4, atol=1e-6)
+    np.testing.assert_allclose(gf["b"], gr["b"], rtol=1e-4, atol=1e-6)
+    np.testing.assert_allclose(gxf, gxr, rtol=1e-4, atol=1e-6)
+
+
+@pytest.mark.parametrize("blocks", [None, (32, 128, 64), (16, 128, 256)])
+def test_tuned_blocks_norm_grad_matches_oracle(blocks, key):
+    """Same sweep through the norm-epilogue vjp — the whole-row
+    residency path must stay grad-exact under tuned blocks too."""
+    M, K, N = 90, 333, 257
+    fused = _normed_loss(
+        lambda x, w, b: ff_dense_norm_vjp(x, w, b, True, blocks))
+    kx, kw, kv = jax.random.split(key, 3)
+    x = jax.random.normal(kx, (M, K), jnp.float32)
+    lp = {"w": jax.random.normal(kw, (K, N), jnp.float32) * K ** -0.5,
+          "b": jnp.full((N,), 0.1, jnp.float32)}
+    v = jax.random.normal(kv, (N,), jnp.float32)
+    yn, g = ff_dense_norm_vjp(x, lp["w"], lp["b"], True, blocks)
+    yr, gr_ = ref.ff_dense_norm_ref(x, lp["w"], lp["b"])
+    np.testing.assert_allclose(yn, yr, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(g, gr_, rtol=1e-5, atol=1e-5)
+    gf, gxf = jax.grad(fused, argnums=(0, 1))(lp, x, v)
+    gr, gxr = jax.grad(_NORM_ORACLE, argnums=(0, 1))(lp, x, v)
+    np.testing.assert_allclose(gf["w"], gr["w"], rtol=1e-4, atol=1e-6)
+    np.testing.assert_allclose(gf["b"], gr["b"], rtol=1e-4, atol=1e-6)
+    np.testing.assert_allclose(gxf, gxr, rtol=1e-4, atol=1e-6)
+
+
 def test_fwd_norm_ref_is_bit_identical_to_composed_norm(key):
     """The ref path of the fused hand-off must reproduce the historical
     ``_norm(layer_apply(...))`` weight-stream bit-for-bit — that is what

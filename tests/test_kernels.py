@@ -4,7 +4,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.kernels import ref
+from repro.kernels import ops, ref
 from repro.kernels.ff_dense import ff_dense
 from repro.kernels.flash_attention import flash_attention
 from repro.kernels.mamba2_ssd import mamba2_ssd
@@ -87,6 +87,76 @@ def test_ssd_kernel_matches_model_path(key):
     y_kern, h_kern = mamba2_ssd(xbar, dA, b, c, chunk=32)
     np.testing.assert_allclose(y_model, y_kern, rtol=2e-4, atol=2e-4)
     np.testing.assert_allclose(h_model, h_kern, rtol=2e-4, atol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# ops dispatch contract: all three ops share the registry-backed impl=
+# interface (helpful unknown-impl error, forced ref == direct oracle,
+# force_pallas deprecation shim).
+# ---------------------------------------------------------------------------
+
+def _op_args(op, key):
+    if op == "ff_dense":
+        return (jax.random.normal(key, (16, 64)),
+                jax.random.normal(key, (64, 128)) * 0.1,
+                jnp.zeros((128,)))
+    if op == "flash_attention":
+        ks = jax.random.split(key, 3)
+        return (jax.random.normal(ks[0], (1, 128, 4, 32)),
+                jax.random.normal(ks[1], (1, 128, 2, 32)),
+                jax.random.normal(ks[2], (1, 128, 2, 32)))
+    ks = jax.random.split(key, 4)
+    return (jax.random.normal(ks[0], (1, 128, 2, 16)),
+            -jax.nn.softplus(jax.random.normal(ks[1], (1, 128, 2))),
+            jax.random.normal(ks[2], (1, 128, 16)),
+            jax.random.normal(ks[3], (1, 128, 16)))
+
+
+@pytest.mark.parametrize("op", ["ff_dense", "flash_attention",
+                                "mamba2_ssd"])
+def test_ops_unknown_impl_lists_choices(op, key):
+    fn = getattr(ops, op)
+    with pytest.raises(ValueError, match="auto | pallas | ref"):
+        fn(*_op_args(op, key), impl="nope")
+
+
+@pytest.mark.parametrize("op,ref_fn", [
+    ("ff_dense", ref.ff_dense_ref),
+    ("flash_attention", ref.flash_attention_ref),
+    ("mamba2_ssd", ref.mamba2_ssd_ref)])
+def test_ops_forced_ref_is_the_oracle(op, ref_fn, key):
+    args = _op_args(op, key)
+    got = getattr(ops, op)(*args, impl="ref")
+    want = ref_fn(*args)
+    for a, b in zip(jax.tree.leaves(got), jax.tree.leaves(want)):
+        assert bool(jnp.array_equal(a, b))
+
+
+@pytest.mark.parametrize("op", ["ff_dense", "flash_attention",
+                                "mamba2_ssd"])
+def test_ops_force_pallas_warns_and_delegates(op, key):
+    """The legacy boolean must warn DeprecationWarning on every op and
+    produce the impl='pallas' result."""
+    args = _op_args(op, key)
+    fn = getattr(ops, op)
+    with pytest.warns(DeprecationWarning, match="impl='pallas'"):
+        got = fn(*args, force_pallas=True)
+    want = fn(*args, impl="pallas")
+    for a, b in zip(jax.tree.leaves(got), jax.tree.leaves(want)):
+        assert bool(jnp.array_equal(a, b))
+    # force_pallas=False defers to the impl argument unchanged
+    with pytest.warns(DeprecationWarning):
+        got = fn(*args, force_pallas=False, impl="ref")
+    for a, b in zip(jax.tree.leaves(got),
+                    jax.tree.leaves(fn(*args, impl="ref"))):
+        assert bool(jnp.array_equal(a, b))
+
+
+def test_ops_impls_tuples_are_live_registry_views():
+    assert ops.FF_DENSE_IMPLS[0] == "auto"
+    assert set(ops.FF_DENSE_IMPLS) >= {"auto", "pallas", "ref"}
+    assert set(ops.FLASH_ATTENTION_IMPLS) >= {"auto", "pallas", "ref"}
+    assert set(ops.MAMBA2_SSD_IMPLS) >= {"auto", "pallas", "ref"}
 
 
 def test_chunked_attention_matches_ref(key):
