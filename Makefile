@@ -1,6 +1,6 @@
 PY := PYTHONPATH=src python
 
-.PHONY: test lint bench bench-smoke tune-smoke pff-exec-smoke fault-smoke api-smoke serve-smoke
+.PHONY: test lint bench bench-smoke tune-smoke pff-exec-smoke fault-smoke api-smoke serve-smoke trace-smoke
 
 test:
 	$(PY) -m pytest -q
@@ -58,6 +58,18 @@ fault-smoke:
 serve-smoke:
 	XLA_FLAGS=--xla_force_host_platform_device_count=4 \
 		$(PY) -m benchmarks.run --only=serve
+
+# Observability gate on 4 faked host devices: traced N=4 executor run +
+# traced train-while-serve run through the exporter registry and the
+# critical-path analyzer. Gates: critical path <= measured makespan <=
+# sum of task durations (two-run protocol), prefetch events reconcile
+# with the executor's hand-off counters, weights stay bit-exact with
+# tracing on, the Chrome export is Perfetto-loadable, and the disabled
+# tracer costs < 2% of the makespan (BENCH_trace.json +
+# BENCH_trace_timeline.json). Exits non-zero on any breach.
+trace-smoke:
+	XLA_FLAGS=--xla_force_host_platform_device_count=4 \
+		$(PY) -m benchmarks.run --only=trace
 
 # XLA_FLAGS: the pff_exec/pff_faults sections need 4 faked host devices
 # (the other sections are device-count agnostic; tier-1 is green at 1

@@ -27,7 +27,7 @@ ERR_BUDGET = 1e-4
 
 SECTIONS = ("tables", "lm", "lm_schedules", "lm_negatives", "kernels",
             "tune", "roofline", "ff_hotloop", "pff_exec", "pff_faults",
-            "serve")
+            "serve", "trace")
 
 
 def main(argv):
@@ -128,6 +128,13 @@ def main(argv):
               "(multi-device) #####")
         from benchmarks import serve as serve_bench
         res = serve_bench.run(quick=not full)
+        failures.extend(res["failures"])
+
+    if only in (None, "trace"):
+        print("\n##### 9. Observability: traced executor + serve run, "
+              "critical-path gates (multi-device) #####")
+        from benchmarks import trace as trace_bench
+        res = trace_bench.run(quick=not full)
         failures.extend(res["failures"])
 
     print(f"\nbenchmarks done in {time.time() - t0:.0f}s")

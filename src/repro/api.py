@@ -67,6 +67,7 @@ from typing import List, Optional
 from repro import data as data_lib
 from repro.core import ff_mlp, pff, pff_exec, strategies
 from repro.kernels import registry as kernel_registry
+from repro.obs import trace as obs_trace
 from repro.core.faults import (              # re-exported resilience surface
     FaultPlan, ResilienceConfig,
 )
@@ -113,6 +114,7 @@ class FitResult:
     profile: Optional[dict] = None
     resilience: Optional[dict] = None
     serve: Optional["ServeResult"] = None   # fit(serve=ServeConfig(...))
+    trace: Optional[object] = None          # obs.trace.Tracer (trace=...)
     raw: object = None
 
 
@@ -136,6 +138,7 @@ class ServeResult:
     accuracy_by_version: Optional[dict] = None
     test_acc: Optional[float] = None        # accuracy over served requests
     fit: Optional[FitResult] = None         # training side (combined mode)
+    trace: Optional[object] = None          # obs.trace.Tracer (trace=...)
     raw: object = None                      # serve.engine.EngineResult
 
 
@@ -161,8 +164,8 @@ def _validate_strategies(cfg):
 def fit(cfg, task=None, *, backend="sequential", schedule=None,
         num_nodes=1, probe_every=0, verbose=False, profile=False,
         devices=None, overlap=True, resilience=None, resume_from=None,
-        serve=None, comm_time=0.0, steps=40, batch=8, seq=64,
-        lr=1e-3) -> FitResult:
+        serve=None, trace=None, comm_time=0.0, steps=40, batch=8,
+        seq=64, lr=1e-3) -> FitResult:
     """Train ``cfg`` on ``task`` with the chosen backend. See the module
     docstring for the backend table.
 
@@ -191,6 +194,13 @@ def fit(cfg, task=None, *, backend="sequential", schedule=None,
     traffic concurrently). The serving side comes back on
     ``FitResult.serve``; ``api.serve()`` is the same machinery with the
     serving result on top.
+    trace: ``True`` or a ``repro.obs.Tracer`` — record an execution
+    trace (spans + events + counters) into ``FitResult.trace``; export
+    it with ``repro.obs.export.export`` and analyze the executor DAG
+    timeline with ``repro.obs.analyze.analyze``. The default tracer
+    blocks after each executor task for accurate per-task durations
+    (like ``profile=``); pass ``Tracer(block_tasks=False)`` to observe
+    with the async overlap intact.
     comm_time: simulate backend — per-DAG-edge cross-node hand-off cost.
     steps/batch/seq/lr: pod backend — pipeline run length and shapes
     (``task`` may be an iterable of token blocks, or None to use the
@@ -213,29 +223,37 @@ def fit(cfg, task=None, *, backend="sequential", schedule=None,
     if serve is not None and not isinstance(serve, ServeConfig):
         raise TypeError(f"serve= expects an api.ServeConfig, got "
                         f"{type(serve).__name__}")
+    tracer = obs_trace.as_tracer(trace)
+    out_trace = tracer if tracer.enabled else None
     if backend == "pod":
-        return _fit_pod(cfg, task, num_nodes=num_nodes, steps=steps,
-                        batch=batch, seq=seq, lr=lr, verbose=verbose)
+        with tracer.span("fit:pod", num_nodes=num_nodes, steps=steps):
+            fres = _fit_pod(cfg, task, num_nodes=num_nodes, steps=steps,
+                            batch=batch, seq=seq, lr=lr, verbose=verbose)
+        fres.trace = out_trace
+        return fres
 
     _validate_strategies(cfg)
     if backend == "sequential":
-        res = pff.run_chapter_schedule(cfg, task, probe_every=probe_every,
-                                       verbose=verbose)
+        with tracer.span("fit:sequential"):
+            res = pff.run_chapter_schedule(cfg, task,
+                                           probe_every=probe_every,
+                                           verbose=verbose)
         return FitResult(backend=backend, cfg=cfg, params=res.params,
                          schedule="sequential", num_nodes=1,
                          records=res.records, test_acc=res.test_acc,
                          train_acc=res.train_acc, history=res.history,
-                         raw=res)
+                         trace=out_trace, raw=res)
 
     if backend == "federated":
-        res = pff.run_federated_schedule(cfg, task, num_nodes,
-                                         probe_every=probe_every,
-                                         verbose=verbose)
+        with tracer.span("fit:federated", num_nodes=num_nodes):
+            res = pff.run_federated_schedule(cfg, task, num_nodes,
+                                             probe_every=probe_every,
+                                             verbose=verbose)
         return FitResult(backend=backend, cfg=cfg, params=res.params,
                          schedule="federated", num_nodes=num_nodes,
                          records=res.records, test_acc=res.test_acc,
                          train_acc=res.train_acc, history=res.history,
-                         raw=res)
+                         trace=out_trace, raw=res)
 
     schedule = schedule or ("sequential" if num_nodes == 1
                             else "all_layers")
@@ -246,30 +264,35 @@ def fit(cfg, task=None, *, backend="sequential", schedule=None,
         if serve is not None:
             return _run_combined(cfg, ex, serve, source=None,
                                  resume_from=resume_from,
-                                 schedule=schedule,
-                                 num_nodes=num_nodes).fit
-        res = ex.run(profile=profile, resume_from=resume_from)
+                                 schedule=schedule, num_nodes=num_nodes,
+                                 tracer=tracer).fit
+        res = ex.run(profile=profile, resume_from=resume_from,
+                     trace=out_trace)
         return FitResult(backend=backend, cfg=cfg, params=res.params,
                          schedule=schedule, num_nodes=num_nodes,
                          records=res.records, test_acc=res.test_acc,
                          makespan=res.makespan,
                          profile=({"node_busy": res.node_busy}
-                                  if profile else None),
+                                  if res.node_busy is not None
+                                  else None),
                          resilience=res.resilience,
-                         raw=res)
+                         trace=res.trace, raw=res)
 
     # backend == "simulate": canonical training once, then replay its
     # measured task timings under the schedule's node assignment
-    res = pff.run_chapter_schedule(cfg, task, probe_every=probe_every,
-                                   verbose=verbose)
-    sim = pff.simulate_schedule(res.records, schedule, num_nodes,
-                                comm_time=comm_time)
+    with tracer.span("fit:simulate", schedule=schedule,
+                     num_nodes=num_nodes):
+        res = pff.run_chapter_schedule(cfg, task, probe_every=probe_every,
+                                       verbose=verbose)
+        sim = pff.simulate_schedule(res.records, schedule, num_nodes,
+                                    comm_time=comm_time)
     return FitResult(backend=backend, cfg=cfg, params=res.params,
                      schedule=schedule, num_nodes=num_nodes,
                      records=res.records, test_acc=res.test_acc,
                      train_acc=res.train_acc, history=res.history,
                      makespan=sim.makespan, speedup=sim.speedup,
-                     utilization=sim.utilization, sim=sim, raw=res)
+                     utilization=sim.utilization, sim=sim,
+                     trace=out_trace, raw=res)
 
 
 # ---------------------------------------------------------------------------
@@ -288,7 +311,7 @@ def _serve_records(engine_res) -> List[dict]:
 
 
 def _serve_result(cfg, sconfig, engine_res, *, schedule=None, num_nodes=1,
-                  fit_result=None) -> ServeResult:
+                  fit_result=None, tracer=obs_trace.NOOP) -> ServeResult:
     slo = serve_engine.summarize(engine_res)
     return ServeResult(
         cfg=cfg, traffic=sconfig.traffic, schedule=schedule,
@@ -296,31 +319,35 @@ def _serve_result(cfg, sconfig, engine_res, *, schedule=None, num_nodes=1,
         swaps=engine_res.swaps, slo=slo,
         timings=dict(engine_res.timings),
         accuracy_by_version=serve_engine.accuracy_by_version(engine_res),
-        test_acc=slo["accuracy"], fit=fit_result, raw=engine_res)
+        test_acc=slo["accuracy"], fit=fit_result,
+        trace=tracer if tracer.enabled else None, raw=engine_res)
 
 
 def _run_combined(cfg, ex, sconfig, *, source, resume_from, schedule,
-                  num_nodes) -> ServeResult:
+                  num_nodes, tracer=obs_trace.NOOP) -> ServeResult:
     """Train-while-serve: one executor run with live publication, one
     serve loop, results cross-linked (``ServeResult.fit`` /
-    ``FitResult.serve``)."""
+    ``FitResult.serve``). One tracer is shared by the serve loop and
+    the executor thread, so the trace has a single clock domain."""
     engine_res = serve_engine.train_while_serve(ex, sconfig, source,
-                                                resume_from=resume_from)
+                                                resume_from=resume_from,
+                                                tracer=tracer)
     res = engine_res.exec_result
     fit_res = FitResult(backend="executor", cfg=cfg, params=res.params,
                         schedule=schedule, num_nodes=num_nodes,
                         records=res.records, test_acc=res.test_acc,
                         makespan=res.makespan, resilience=res.resilience,
-                        raw=res)
+                        trace=res.trace, raw=res)
     sres = _serve_result(cfg, sconfig, engine_res, schedule=schedule,
-                         num_nodes=num_nodes, fit_result=fit_res)
+                         num_nodes=num_nodes, fit_result=fit_res,
+                         tracer=tracer)
     fit_res.serve = sres
     return sres
 
 
 def serve(cfg, task=None, *, traffic=None, source=None, params=None,
           schedule=None, num_nodes=1, devices=None, overlap=True,
-          resilience=None, resume_from=None, serve_cfg=None,
+          resilience=None, resume_from=None, serve_cfg=None, trace=None,
           **knobs) -> ServeResult:
     """Serve the goodness classifier under deterministic open-loop
     traffic — while TRAINING it live on the executor (the default), or
@@ -339,6 +366,12 @@ def serve(cfg, task=None, *, traffic=None, source=None, params=None,
     serve_cfg / **knobs: a ``ServeConfig``, and/or its fields as
     keywords (``rate=...``, ``max_batch=...``, ``max_wait_s=...``,
     ``queue_cap=...``, ``n_requests=...``, ``seed=...``) — keywords win.
+    trace: ``True`` or a ``repro.obs.Tracer`` — record admission /
+    batch-form / score / swap-install spans (and, in combined mode, the
+    executor's task spans on the SAME clock) into ``ServeResult.trace``.
+    Combined mode: the default tracer blocks training after every task;
+    pass ``Tracer(block_tasks=False)`` to watch serving under the real
+    overlapped training load.
     """
     base = serve_cfg if serve_cfg is not None else ServeConfig()
     if traffic is not None:
@@ -351,6 +384,7 @@ def serve(cfg, task=None, *, traffic=None, source=None, params=None,
     sconfig = dataclasses.replace(base, **knobs)
 
     good = _validate_strategies(cfg)
+    tracer = obs_trace.as_tracer(trace)
     if source is None:
         if task is None:
             raise ValueError("serve needs a task or an explicit "
@@ -362,8 +396,9 @@ def serve(cfg, task=None, *, traffic=None, source=None, params=None,
             sconfig = dataclasses.replace(sconfig, n_requests=256)
         engine_res = serve_engine.serve_static(
             params, cfg, source, sconfig,
-            eval_mode=good.eval_mode(cfg), impl=ff_mlp.kernel_impl(cfg))
-        return _serve_result(cfg, sconfig, engine_res)
+            eval_mode=good.eval_mode(cfg), impl=ff_mlp.kernel_impl(cfg),
+            tracer=tracer)
+        return _serve_result(cfg, sconfig, engine_res, tracer=tracer)
 
     if task is None:
         raise ValueError("train-while-serve needs the training task "
@@ -375,7 +410,7 @@ def serve(cfg, task=None, *, traffic=None, source=None, params=None,
                               resilience=resilience)
     return _run_combined(cfg, ex, sconfig, source=source,
                          resume_from=resume_from, schedule=schedule,
-                         num_nodes=num_nodes)
+                         num_nodes=num_nodes, tracer=tracer)
 
 
 def simulate(result_or_records, schedule, num_nodes,
@@ -385,8 +420,10 @@ def simulate(result_or_records, schedule, num_nodes,
     a raw record list."""
     records = getattr(result_or_records, "records", result_or_records)
     if records is None:
-        raise ValueError("no task records on this result (executor "
-                         "results carry records only with profile=True)")
+        raise ValueError(
+            "no task records on this result (executor results carry "
+            "records only when profiled or traced with a blocking "
+            "tracer — fit(..., profile=True) or fit(..., trace=True))")
     return pff.simulate_schedule(records, schedule, num_nodes, **kw)
 
 

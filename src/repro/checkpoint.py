@@ -12,6 +12,12 @@ here: ``meta=`` (a JSON-serializable dict riding inside the archive,
 e.g. the completed chapter + schedule fingerprint) and ``strict=``
 restore (error on archive keys the template did not consume — a wrong
 or stale manifest fails loudly instead of silently dropping state).
+
+Both entry points take ``tracer=`` (an ``obs.trace`` tracer; default
+the no-op singleton): a traced save/restore records one
+``checkpoint:save`` / ``checkpoint:restore`` span covering the full
+device->host drain + serialization (the per-chapter overhead
+``BENCH_pff_faults.json`` measures, now visible on the timeline).
 """
 from __future__ import annotations
 
@@ -21,6 +27,8 @@ import os
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro.obs import trace as obs_trace
 
 # reserved archive keys (not pytree leaves)
 _STEP_KEY = "__step__"
@@ -40,10 +48,11 @@ def _flatten(tree):
     return flat
 
 
-def save(path, tree, step=None, meta=None):
+def save(path, tree, step=None, meta=None, tracer=obs_trace.NOOP):
     """Atomically persist ``tree``; optionally a ``step`` int and a
     JSON-serializable ``meta`` dict (read back via ``restore(...,
     with_meta=True)``)."""
+    t0 = tracer.now()
     flat = _flatten(tree)
     if _STEP_KEY in flat or _META_KEY in flat:
         raise ValueError(f"tree uses reserved key {_STEP_KEY}/{_META_KEY}")
@@ -58,9 +67,14 @@ def save(path, tree, step=None, meta=None):
     with open(tmp, "wb") as f:
         np.savez(f, **flat)
     os.replace(tmp, path)
+    if tracer.enabled:
+        tracer.add_span("checkpoint:save", t0,
+                        path=os.path.basename(path), step=step,
+                        bytes=os.path.getsize(path))
 
 
-def restore(path, template, *, strict=False, with_meta=False):
+def restore(path, template, *, strict=False, with_meta=False,
+            tracer=obs_trace.NOOP):
     """Returns ``(tree_like_template, step or None)`` — or ``(tree,
     step, meta or None)`` with ``with_meta=True``.
 
@@ -68,6 +82,7 @@ def restore(path, template, *, strict=False, with_meta=False):
     consume (default False keeps the historical lenient behavior of
     ignoring extras — fine for partial restores, wrong for manifests).
     """
+    t0 = tracer.now()
     with np.load(path) as z:
         data = {k: z[k] for k in z.files}
     step = data.pop(_STEP_KEY, None)
@@ -97,4 +112,7 @@ def restore(path, template, *, strict=False, with_meta=False):
                 + ("..." if len(extra) > 5 else ""))
     tree = jax.tree_util.tree_unflatten(treedef, out)
     step = int(step) if step is not None else None
+    if tracer.enabled:
+        tracer.add_span("checkpoint:restore", t0,
+                        path=os.path.basename(path), step=step)
     return (tree, step, meta) if with_meta else (tree, step)

@@ -90,6 +90,17 @@ the aggregator averages weighted by live shard sizes — bit-checked
 against the sequential reference ``pff.run_elastic_federated`` (both
 call ``pff.elastic_node_round``). ``ExecResult.resilience`` reports
 retries, reassignments, checkpoint/restore cost and faults injected.
+
+Observability (``repro.obs``): ``run(trace=...)`` records one
+``task:<kind>`` span per DAG task (attrs kind/layer/chapter/node),
+``handoff:*`` events from the transfer slots, ``resilience:*`` events
+and counters from the retry/checkpoint machinery, and a closing
+``run`` span carrying the DAG shape — everything ``obs.analyze`` needs
+to rebuild the critical path over ``pff_dag.deps`` and attribute
+hand-off cost on/off it. The old ``profile=True`` path now rides the
+tracer: ``ExecResult.records`` / ``node_busy`` are derived from the
+task spans (identical order and semantics), and the untraced default
+pays only no-op tracer calls (``obs.trace.NOOP``).
 """
 from __future__ import annotations
 
@@ -107,6 +118,7 @@ from repro import checkpoint as checkpoint_lib, data as data_lib, optim
 from repro.core import faults as faults_lib
 from repro.core import ff, ff_mlp, pff, pff_dag, strategies
 from repro.launch import mesh as mesh_lib
+from repro.obs import trace as obs_trace
 
 
 @dataclasses.dataclass
@@ -116,10 +128,11 @@ class ExecResult:
     num_nodes: int
     makespan: float                        # seconds, first dispatch -> ready
     test_acc: float
-    records: Optional[List[pff.TaskRecord]]  # per-task durations (profile)
-    node_busy: Optional[List[float]]         # per-node busy seconds (profile)
+    records: Optional[List[pff.TaskRecord]]  # per-task durations (traced)
+    node_busy: Optional[List[float]]         # per-node busy seconds (traced)
     handoff: Optional[dict] = None           # transfer-slot counters
     resilience: Optional[dict] = None        # retry/checkpoint/fault stats
+    trace: Optional[object] = None           # obs.trace.Tracer, if traced
 
 
 class _ShardDropped(Exception):
@@ -177,15 +190,25 @@ class _Handoff:
     weights, so a regression here fails the bit-exactness oracle loudly.
     """
 
-    def __init__(self, devices, enabled: bool, fault_cb=None):
+    def __init__(self, devices, enabled: bool, fault_cb=None,
+                 tracer=obs_trace.NOOP):
         self.devices = devices
         self.enabled = enabled
         self.fault_cb = fault_cb
+        self.tracer = tracer
         self.slots: Dict[tuple, tuple] = {}   # (name, node) -> (ver, tree, corrupt)
         self.stats = {"prefetch_issued": 0, "prefetch_hits": 0,
                       "pulls_cross": 0, "pulls_local": 0,
                       "prefetch_dropped": 0, "corrupt_injected": 0,
                       "corrupt_detected": 0}
+
+    def _event(self, name, slot_name, node, version):
+        # every counter bump mirrors onto the tracer timeline, so the
+        # analyzer's on/off-critical-path attribution reconciles with
+        # these stats exactly (a trace-smoke gate)
+        if self.tracer.enabled:
+            self.tracer.event(name, tree=str(slot_name[0]), node=node,
+                              version=version)
 
     @staticmethod
     def _poison(leaf):
@@ -201,6 +224,7 @@ class _Handoff:
             action = self.fault_cb(name, node, version)
             if action == "drop":
                 self.stats["prefetch_dropped"] += 1
+                self._event("handoff:drop", name, node, version)
                 return
             if action == "corrupt":
                 tree = jax.tree_util.tree_map(self._poison, tree)
@@ -209,6 +233,7 @@ class _Handoff:
         self.slots[(name, node)] = (
             version, jax.device_put(tree, self.devices[node]), corrupt)
         self.stats["prefetch_issued"] += 1
+        self._event("handoff:prefetch_issue", name, node, version)
 
     def _on_device(self, tree, dev) -> bool:
         leaves = jax.tree_util.tree_leaves(tree)
@@ -225,14 +250,18 @@ class _Handoff:
                 # integrity gate: poisoned bits are never served
                 del self.slots[(name, node)]
                 self.stats["corrupt_detected"] += 1
+                self._event("handoff:corrupt_detected", name, node, version)
             else:
                 if pop:
                     del self.slots[(name, node)]
                 self.stats["prefetch_hits"] += 1
+                self._event("handoff:prefetch_hit", name, node, version)
                 return slot[1]
         dev = self.devices[node]
-        self.stats["pulls_local" if self._on_device(tree, dev)
-                   else "pulls_cross"] += 1
+        local = self._on_device(tree, dev)
+        self.stats["pulls_local" if local else "pulls_cross"] += 1
+        self._event("handoff:pull_local" if local else "handoff:pull_cross",
+                    name, node, version)
         return jax.device_put(tree, dev)
 
     def drop_node_slots(self, node: int):
@@ -284,6 +313,8 @@ class PFFExecutor:
                     f"elastic federated membership supports key-only "
                     f"negative strategies; {cfg.neg_mode!r} needs "
                     f"full-model scores")
+        self._tracer = obs_trace.NOOP
+        self._block = False
         self._const_dirty = False
         self._setup_constants()
 
@@ -393,13 +424,24 @@ class PFFExecutor:
         return ((const["xk0"] if idx is None else const["xk0"][idx],),
                 (const["y"] if idx is None else const["y"][idx],))
 
-    def _maybe_record(self, profile, node, kind, layer, chapter, t0, out):
-        if not profile:
-            return
-        jax.block_until_ready(out)
-        dt = time.perf_counter() - t0
-        self._records.append(pff.TaskRecord(kind, layer, chapter, dt))
-        self._busy[node] += dt
+    def _finish_task(self, node, kind, layer, chapter, t0, out):
+        """Close one DAG task: block (timeline mode only — real device
+        time at the cost of overlap) and record the ``task:<kind>`` span
+        the analyzer's critical path is built from. ``ExecResult.records``
+        / ``node_busy`` are derived from these spans after the run."""
+        if self._block:
+            jax.block_until_ready(out)
+        tr = self._tracer
+        if tr.enabled:
+            tr.add_span("task:" + kind, t0, kind=kind, layer=layer,
+                        chapter=chapter, node=node)
+
+    def _rtime(self, name, dt):
+        """Resilience seconds: one mechanism feeds both ``_rstats``
+        (surfaced via ``FitResult.resilience``) and the tracer's
+        counters — the scattered ad-hoc timers folded onto the trace."""
+        self._rstats[name] += dt
+        self._tracer.counter(name, dt)
 
     # ---- resilience: fault consult, retry/backoff, death, checkpoints ----
     @property
@@ -441,11 +483,15 @@ class PFFExecutor:
                                * rc.backoff_factor ** attempt)
                     attempt += 1
                     self._rstats["retries"] += 1
-                    self._rstats["recovery_time_s"] += (
-                        time.perf_counter() - t0)
+                    if self._tracer.enabled:
+                        self._tracer.event(
+                            "resilience:retry", kind=kind, layer=layer,
+                            chapter=chapter, node=node, attempt=attempt)
+                    self._rtime("recovery_time_s",
+                                time.perf_counter() - t0)
                     continue
                 self._declare_dead(node)
-                self._rstats["recovery_time_s"] += time.perf_counter() - t0
+                self._rtime("recovery_time_s", time.perf_counter() - t0)
                 if self.schedule == "federated":
                     raise _ShardDropped(node) from None
 
@@ -463,6 +509,9 @@ class PFFExecutor:
         """
         self._dead.add(node)
         self._rstats["dead_nodes"].append(node)
+        if self._tracer.enabled:
+            self._tracer.event("resilience:dead_node", node=node,
+                               schedule=self.schedule)
         if self.schedule == "federated":
             self._rstats["shards_dropped"] += 1
             return
@@ -483,6 +532,9 @@ class PFFExecutor:
             # resume tests exercise real crash recovery. Sync first so
             # the pre-kill checkpoint (phase="post") is really on disk.
             jax.block_until_ready([s[0] for s in self._states])
+            if self._tracer.enabled:
+                self._tracer.event("resilience:kill", chapter=chapter,
+                                   phase=phase)
             print(f"[pff_exec] injected kill at chapter {chapter} "
                   f"({phase})", flush=True)
             os._exit(faults_lib.KILL_EXIT)
@@ -531,13 +583,14 @@ class PFFExecutor:
         # checkpoint.save syncs leaves to host — that device->host drain
         # is the per-chapter overhead BENCH_pff_faults.json measures
         checkpoint_lib.save(checkpoint_path(rc.checkpoint_dir, chapter),
-                            tree, step=chapter, meta=meta)
+                            tree, step=chapter, meta=meta,
+                            tracer=self._tracer)
         kept = sorted(glob.glob(os.path.join(rc.checkpoint_dir,
                                              "pff_chapter_*.npz")))
         for old in kept[:-rc.keep_last] if rc.keep_last > 0 else []:
             os.remove(old)
         self._rstats["checkpoints_written"] += 1
-        self._rstats["checkpoint_time_s"] += time.perf_counter() - t0
+        self._rtime("checkpoint_time_s", time.perf_counter() - t0)
 
     def _restore(self, resume_from):
         """Load a chapter manifest and return its completed chapter."""
@@ -549,7 +602,8 @@ class PFFExecutor:
                     f"no pff_chapter_*.npz manifest in {resume_from!r}")
         cfg = self.cfg
         tree, _, meta = checkpoint_lib.restore(
-            path, self._ckpt_template(), strict=True, with_meta=True)
+            path, self._ckpt_template(), strict=True, with_meta=True,
+            tracer=self._tracer)
         if meta is None:
             raise ValueError(f"{path!r} carries no manifest meta — not a "
                              f"PFF chapter checkpoint")
@@ -572,14 +626,14 @@ class PFFExecutor:
         return int(meta["chapter"])
 
     # ---- per-task bodies (each mirrors the sequential trainer) -----------
-    def _train_task(self, k, chapter, node, acts, extras, lrs, kc, profile):
+    def _train_task(self, k, chapter, node, acts, extras, lrs, kc):
         if self.resilience is None:
             return self._train_task_body(k, chapter, node, acts, extras,
-                                         lrs, kc, profile)
+                                         lrs, kc)
         out = self._resilient(
             "train", k, chapter, node,
             lambda: self._train_task_body(k, chapter, node, acts, extras,
-                                          lrs, kc, profile))
+                                          lrs, kc))
         if k == 0:
             # "mid-chapter" kill point: the chapter's first train task
             # has completed but the chapter has not — resume must replay
@@ -587,24 +641,22 @@ class PFFExecutor:
             self._maybe_kill(chapter, "mid")
         return out
 
-    def _head_task(self, chapter, node, idx, lrs_head, kc, profile):
+    def _head_task(self, chapter, node, idx, lrs_head, kc):
         if self.resilience is None:
-            return self._head_task_body(chapter, node, idx, lrs_head, kc,
-                                        profile)
+            return self._head_task_body(chapter, node, idx, lrs_head, kc)
         return self._resilient(
             "head", self.n_layers, chapter, node,
             lambda: self._head_task_body(chapter, node, idx, lrs_head,
-                                         kc, profile))
+                                         kc))
 
-    def _neg_task(self, chapter, node, profile):
+    def _neg_task(self, chapter, node):
         if self.resilience is None:
-            return self._neg_task_body(chapter, node, profile)
+            return self._neg_task_body(chapter, node)
         return self._resilient(
             "neg_gen", -1, chapter, node,
-            lambda: self._neg_task_body(chapter, node, profile))
+            lambda: self._neg_task_body(chapter, node))
 
-    def _train_task_body(self, k, chapter, node, acts, extras, lrs, kc,
-                         profile):
+    def _train_task_body(self, k, chapter, node, acts, extras, lrs, kc):
         """One chapter-train task via the goodness strategy. For
         Performance-Optimized goodness this call carries the layer's
         local_head task fused in (see module docstring); it records as
@@ -613,7 +665,7 @@ class PFFExecutor:
         previous chapter computed (popped: the jit donates its buffers);
         the outgoing state is immediately published toward its DAG
         consumers."""
-        t0 = time.perf_counter()
+        t0 = self._tracer.now()
         if self.resilience is not None:
             # the driver computed acts/extras before this (possibly
             # retried) dispatch — if the node was reassigned to a
@@ -636,13 +688,12 @@ class PFFExecutor:
             # sound (no global backward pass to invalidate it). The bus
             # copies before parking; the donated buffers stay ours.
             self._publish.publish_layer(k, chapter, self.good.export([state]))
-        self._maybe_record(profile, node, "train", k, chapter, t0,
-                           state[0])
+        self._finish_task(node, "train", k, chapter, t0, state[0])
         return state[0]
 
-    def _head_task_body(self, chapter, node, idx, lrs_head, kc, profile):
+    def _head_task_body(self, chapter, node, idx, lrs_head, kc):
         const = self._const[node]
-        t0 = time.perf_counter()
+        t0 = self._tracer.now()
         xn_all = (const["x_neutral"] if idx is None
                   else const["x_neutral"][idx])
         # pull every layer onto the head node (no-op when already there,
@@ -667,16 +718,16 @@ class PFFExecutor:
             if nxt != node:
                 self._handoff.prefetch(("head",), nxt, chapter,
                                        (head, op))
-        self._maybe_record(profile, node, "head", self.n_layers, chapter,
-                           t0, head["w"])
+        self._finish_task(node, "head", self.n_layers, chapter, t0,
+                          head["w"])
 
-    def _neg_task_body(self, chapter, node, profile):
+    def _neg_task_body(self, chapter, node):
         """Score-needing (AdaptiveNEG) regeneration from the full
         chapter-c model, published for the next chapter
         ("UpdateXNEG(publish=True)" — the DAG's strict_neg gating,
         matching the sequential trainer)."""
         const = self._const[node]
-        t0 = time.perf_counter()
+        t0 = self._tracer.now()
         params = {"layers": [self._layer_params(k, node)
                              for k in range(self.n_layers)]}
         scores = pff._class_scores_chunked(params, const["x"], self.cfg)
@@ -692,10 +743,10 @@ class PFFExecutor:
                     chapter=chapter + 1):
                 if nxt != node:
                     self._handoff.prefetch(("neg",), nxt, chapter, xn0)
-        self._maybe_record(profile, node, "neg_gen", -1, chapter, t0, xn0)
+        self._finish_task(node, "neg_gen", -1, chapter, t0, xn0)
 
     # ---- schedule drivers ------------------------------------------------
-    def _run_chapter_owned(self, chapter, profile):
+    def _run_chapter_owned(self, chapter):
         """all_layers / federated / sequential: one node runs the whole
         chapter, computing its own forward features as it trains."""
         node = pff_dag.node_of(self.schedule, self.num_nodes, layer=0,
@@ -706,7 +757,7 @@ class PFFExecutor:
         acts, extras = self._chapter_inputs(chapter, node)
         for k in range(self.n_layers):
             lp = self._train_task(k, chapter, node, acts, extras, lrs,
-                                  kc, profile)
+                                  kc)
             if k + 1 < self.n_layers:
                 if self.resilience is not None:
                     # a mid-chapter reassignment leaves this loop's acts
@@ -715,11 +766,11 @@ class PFFExecutor:
                     acts = jax.device_put(acts, self.devices[node])
                 acts = tuple(self._fwd(lp, a) for a in acts)
         if self.has_head:
-            self._head_task(chapter, node, idx, lrs_head, kc, profile)
+            self._head_task(chapter, node, idx, lrs_head, kc)
         if self.has_neg and self.neg.needs_scores:
-            self._neg_task(chapter, node, profile)
+            self._neg_task(chapter, node)
 
-    def _run_chapter_single_layer(self, chapter, profile):
+    def _run_chapter_single_layer(self, chapter):
         """single_layer: node k owns layer k and re-runs the forward
         pass of layers < k over the train set (Algorithm 1 lines 3-5) —
         the load imbalance the paper observes. Weight hand-off: node k
@@ -733,23 +784,22 @@ class PFFExecutor:
             for j in range(k):       # Algorithm-1 forward recompute
                 w_j = self._layer_params(j, node)
                 acts = tuple(self._fwd(w_j, a) for a in acts)
-            self._train_task(k, chapter, node, acts, extras, lrs, kc,
-                             profile)
+            self._train_task(k, chapter, node, acts, extras, lrs, kc)
         if self.has_head:
             node = pff_dag.head_node_of(self.schedule, self.num_nodes,
                                         n_layers=self.n_layers,
                                         chapter=chapter)
-            self._head_task(chapter, node, None, lrs_head, kc, profile)
+            self._head_task(chapter, node, None, lrs_head, kc)
         if self.has_neg and self.neg.needs_scores:
             # the LAST node holds the full model freshest: it generates
             # and publishes for everyone (the paper's serialization).
             self._neg_task(chapter,
                            pff_dag.neg_node_of(self.schedule,
                                                self.num_nodes,
-                                               chapter=chapter), profile)
+                                               chapter=chapter))
 
     # ---- elastic federated rounds (resilience.membership) ----------------
-    def _run_round_elastic(self, r, profile):
+    def _run_round_elastic(self, r):
         """One elastic Federated-PFF round: every live node trains a
         COPY of the round-start model on its own shard (concurrently —
         the dispatches are async and land on distinct devices), then the
@@ -793,7 +843,7 @@ class PFFExecutor:
 
             def body(node=node, const=const, idx=idx, acts=acts,
                      extras=extras, st0=st0, head0=head0):
-                t0 = time.perf_counter()
+                t0 = self._tracer.now()
                 out = pff.elastic_node_round(
                     self.good, self.cfg, st0, head0, acts, extras, lrs,
                     lrs_head, jax.random.fold_in(kr, node),
@@ -802,8 +852,7 @@ class PFFExecutor:
                     x_neutral=(const["x_neutral"][idx]
                                if self.has_head else None),
                     train_head=self.has_head)
-                self._maybe_record(profile, node, "round", -1, r, t0,
-                                   out[0][0][0])
+                self._finish_task(node, "round", -1, r, t0, out[0][0][0])
                 return out
 
             try:
@@ -860,10 +909,23 @@ class PFFExecutor:
 
     def run(self, *, profile: bool = False,
             resume_from: Optional[str] = None,
-            publish=None) -> ExecResult:
+            publish=None, trace=None) -> ExecResult:
         """Executes the schedule once. ``profile=True`` blocks after
         every task to collect per-task ``TaskRecord``s (destroys the
         overlap, so use a separate non-profiled run for makespan).
+
+        trace: an ``obs.trace.Tracer`` (or True for a fresh one) —
+        records one ``task:<kind>`` span per DAG task plus hand-off /
+        retry / checkpoint events and a closing ``run`` span, all on
+        the tracer's clock domain (shared with the serve loop when
+        ``train_while_serve`` passes one tracer to both).
+        ``ExecResult.records`` / ``node_busy`` are DERIVED from the
+        task spans whenever they carry real device time (``profile``,
+        or a tracer with ``block_tasks`` — the default), so every
+        timeline-traced run doubles as a profile run; with
+        ``block_tasks=False`` spans measure dispatch only and records
+        stay None. Use a FRESH tracer per run — the analyzer treats
+        all task spans in a trace as one run.
 
         resume_from: a chapter manifest written by a previous run (or
         its directory — the newest manifest is used); training replays
@@ -883,6 +945,15 @@ class PFFExecutor:
         plan = self._fault_plan
         if plan is not None:
             plan.reset()
+        tracer = obs_trace.as_tracer(trace)
+        if profile and not tracer.enabled:
+            tracer = obs_trace.Tracer()     # profile rides the tracer now
+        self._tracer = tracer
+        # timeline mode: block per task so span durations are device
+        # time (profile's historical semantics — destroys overlap)
+        self._block = profile or (tracer.enabled and tracer.block_tasks)
+        timeline = tracer.enabled and self._block
+        span0 = tracer.span_count()
         # undo a previous run's dead-node remapping (benchmarks reuse
         # the executor for warm-cache timing)
         self.devices[:] = self._devices_init
@@ -896,17 +967,17 @@ class PFFExecutor:
             self._rstats["elastic_rounds"] = []
         params = ff_mlp.init(jax.random.PRNGKey(cfg.seed), cfg)
         opt = ff_mlp.opt_init(params)
-        self._records: List[pff.TaskRecord] = []
-        self._busy = [0.0] * self.num_nodes
         self._neg: Tuple[int, object] = (-1, None)
         self._ver = [-1] * self.n_layers       # chapter of last train(k)
         self._head_ver = -1
         self._publish = publish
         self._handoff = _Handoff(
             self.devices, self.overlap,
-            fault_cb=plan.handoff_action if plan is not None else None)
+            fault_cb=plan.handoff_action if plan is not None else None,
+            tracer=tracer)
 
         t_start = time.perf_counter()
+        t_trace0 = tracer.now()
         # initial placement rides the timed window: it is part of the
         # schedule's real cost (the simulator's t=0 is the same state).
         self._states = [self.good.get_state(params, opt, k)
@@ -923,16 +994,16 @@ class PFFExecutor:
                 has_head=self.has_head, has_neg=self._ckpt_has_neg(),
                 strict_neg=self._ckpt_has_neg())
             self._rstats["resumed_from_chapter"] = done
-            self._rstats["restore_time_s"] = time.perf_counter() - t0
+            self._rtime("restore_time_s", time.perf_counter() - t0)
         # serving replicas get a full pre-training (or restored-line)
         # snapshot before the first chapter task dispatches
         self._publish_snapshot(min([self._head_ver] + self._ver
                                    if self.has_head else self._ver))
         for chapter in range(start_chapter, cfg.splits):
             if elastic:
-                self._run_round_elastic(chapter, profile)
+                self._run_round_elastic(chapter)
             elif self.schedule == "single_layer":
-                self._run_chapter_single_layer(chapter, profile)
+                self._run_chapter_single_layer(chapter)
             elif (self.schedule == "federated" and self._dead
                   and pff_dag.node_of(self.schedule, self.num_nodes,
                                       layer=0, chapter=chapter)
@@ -949,14 +1020,14 @@ class PFFExecutor:
                     jnp.copy, (list(self._states), self._head))
                 snap_meta = (list(self._ver), self._head_ver, self._neg)
                 try:
-                    self._run_chapter_owned(chapter, profile)
+                    self._run_chapter_owned(chapter)
                 except _ShardDropped:
                     self._states, self._head = list(snap[0]), snap[1]
                     self._ver, self._head_ver, self._neg = (
                         list(snap_meta[0]), snap_meta[1], snap_meta[2])
                     self._rstats["chapters_skipped"] += 1
             else:
-                self._run_chapter_owned(chapter, profile)
+                self._run_chapter_owned(chapter)
             self._write_checkpoint(chapter)
             if rc is not None:
                 self._maybe_kill(chapter, "post")
@@ -965,21 +1036,50 @@ class PFFExecutor:
             outs.append(self._neg[1])
         jax.block_until_ready(outs)
         makespan = time.perf_counter() - t_start
+        if tracer.enabled:
+            # the closing run span carries the DAG shape so
+            # obs.analyze can rebuild the exact pff_dag dependency
+            # structure from the trace alone
+            strict = self.has_neg and self.neg.needs_scores
+            tracer.add_span(
+                "run", t_trace0, schedule=self.schedule,
+                num_nodes=self.num_nodes, splits=cfg.splits,
+                n_layers=self.n_layers, has_head=self.has_head,
+                has_neg=strict, strict_neg=strict,
+                start_chapter=start_chapter, overlap=self.overlap,
+                blocked=self._block, makespan_s=makespan)
 
         final = self._pull({**self.good.export(self._states),
                             "head": self._head[0]}, 0)
         acc = ff_mlp.accuracy(final, self.task.x_test, self.task.y_test,
                               cfg.num_classes, self.good.eval_mode(cfg),
                               impl=self.impl)
+        records = node_busy = None
+        if timeline:
+            # satellite of the obs subsystem: records/node_busy are no
+            # longer a separate ad-hoc profiling path — they are a VIEW
+            # of the task spans (same order, same blocked durations the
+            # old profile=True collected), so pff.simulate_schedule
+            # replays traced runs unchanged
+            records = []
+            node_busy = [0.0] * self.num_nodes
+            for s in tracer.snapshot(start=span0):
+                if not s.name.startswith("task:"):
+                    continue
+                a = s.attrs
+                records.append(pff.TaskRecord(a["kind"], a["layer"],
+                                              a["chapter"], s.duration))
+                node_busy[a["node"]] += s.duration
         res_stats = None
         if rc is not None or resume_from is not None:
             res_stats = dict(self._rstats)
             res_stats["faults_injected"] = (dict(plan.fired)
                                             if plan is not None else {})
+        self._block = False
         return ExecResult(final, self.schedule, self.num_nodes, makespan,
-                          acc, self._records if profile else None,
-                          list(self._busy) if profile else None,
-                          dict(self._handoff.stats), res_stats)
+                          acc, records, node_busy,
+                          dict(self._handoff.stats), res_stats,
+                          tracer if tracer.enabled else None)
 
 
 def run_pff_exec(cfg, task, schedule, num_nodes, *, devices=None,

@@ -20,14 +20,15 @@ This module sits BELOW ``ff_mlp``/``pff``/``pff_exec`` in the import
 graph: it defines the registry machinery and the negative-sample
 builtins (which only need ``repro.core.ff``); the goodness and
 classifier builtins close over ``ff_mlp``'s jitted trainers and are
-registered at the bottom of ``ff_mlp.py``.
+registered at the bottom of ``ff_mlp.py``. Importing this module pulls
+in NO jax — ``repro.core.ff`` is imported lazily inside the builtin
+strategy bodies — because ``repro.obs.export`` reuses ``Registry`` and
+the obs package must stay analyzable offline where jax is absent.
 """
 from __future__ import annotations
 
 import dataclasses
 from typing import Callable, Optional
-
-from repro.core import ff
 
 
 class Registry:
@@ -188,6 +189,7 @@ def register_classifier(name, scores, *, trains_head=False,
 
 def _random_negatives(key, cfg, params, x, y, scores):
     """RandomNEG: uniform over the C-1 wrong labels, fresh each chapter."""
+    from repro.core import ff
     labels = ff.random_wrong_labels(key, y, cfg.num_classes)
     return ff.overlay_label(x, labels, cfg.num_classes)
 
@@ -198,6 +200,7 @@ def _adaptive_negatives(key, cfg, params, x, y, scores):
     which keeps the initial negatives bit-identical across strategies."""
     if scores is None:
         return _random_negatives(key, cfg, params, x, y, scores)
+    from repro.core import ff
     labels = ff.adaptive_wrong_labels(scores, y, key=key)
     return ff.overlay_label(x, labels, cfg.num_classes)
 

@@ -58,6 +58,7 @@ import jax.numpy as jnp
 
 from repro.kernels import registry as registry_lib
 from repro.kernels.ff_dense import VMEM_BUDGET_BYTES, vmem_block_bytes
+from repro.obs import trace as obs_trace
 
 # Same correctness budget as benchmarks.run.ERR_BUDGET (not imported:
 # src/ must not depend on the benchmarks package).
@@ -314,7 +315,8 @@ def _wall_timer(thunk, label, repeats=2):
 
 def tune_ff_dense(shapes, *, norms=(False, True), dtype=jnp.float32,
                   table=None, timer=None, err_gate=ERR_GATE, seed=0,
-                  max_candidates=None, save=True, verbose=True):
+                  max_candidates=None, save=True, verbose=True,
+                  tracer=obs_trace.NOOP):
     """Sweep ``shapes`` (iterable of (M, K, N)), persist winners.
 
     Returns a list of per-bucket row dicts (winner, best blocks, ref
@@ -322,7 +324,9 @@ def tune_ff_dense(shapes, *, norms=(False, True), dtype=jnp.float32,
     turns into BENCH_kernel_tune.json. ``timer(thunk, label) -> s`` is
     injectable; ``max_candidates`` bounds the Pallas grid per bucket
     (smoke mode). ``save=True`` writes the table and drops the memo so
-    subsequent ``lookup``s see the new winners.
+    subsequent ``lookup``s see the new winners. ``tracer=`` (an
+    ``obs.trace`` tracer) records one ``tune:candidate`` span per
+    measured candidate and a ``tune:reject`` event per gate breach.
     """
     platform = jax.default_backend()
     interpret = platform != "tpu"
@@ -373,6 +377,9 @@ def tune_ff_dense(shapes, *, norms=(False, True), dtype=jnp.float32,
                 except Exception as e:  # an impl that cannot even run
                     rejected.append({"impl": name, "blocks": blocks,
                                      "reason": f"raised {e!r}"})
+                    if tracer.enabled:
+                        tracer.event("tune:reject", key=key, impl=name,
+                                     reason="raised")
                     continue
                 if err > err_gate or grad_err > err_gate:
                     rejected.append({
@@ -380,11 +387,22 @@ def tune_ff_dense(shapes, *, norms=(False, True), dtype=jnp.float32,
                         "reason": (f"oracle error breach: err={err:.2e} "
                                    f"grad_err={grad_err:.2e} > "
                                    f"{err_gate:.0e}")})
+                    if tracer.enabled:
+                        tracer.event("tune:reject", key=key, impl=name,
+                                     reason="oracle_error", err=err,
+                                     grad_err=grad_err)
                     continue
                 step = jax.jit(jax.value_and_grad(
                     _make_loss(registry_lib.ff_dense.get(name).fn,
                                norm, interpret, blocks)))
+                t0_m = tracer.now()
                 t = timer(lambda: step(w, x, b, cy, cg), label)
+                if tracer.enabled:
+                    tracer.add_span(
+                        "tune:candidate", t0_m, key=key, impl=name,
+                        bm=blocks[0] if blocks else None,
+                        bn=blocks[1] if blocks else None,
+                        time_s=float(t))
                 measured.append({"impl": name, "blocks": blocks,
                                  "time_s": float(t), "err": err,
                                  "grad_err": grad_err})

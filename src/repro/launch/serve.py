@@ -94,17 +94,27 @@ def serve(cfg, *, batch, prompt_len, gen, seed=0, greedy=True):
 def _main_ff(args):
     from repro import api
     from repro.configs.ff_mlp import FFMLPConfig
+    from repro.obs import export as obs_export, trace as obs_trace
 
     task = data_lib.mnist_like(n_train=args.n_train, n_test=400)
     cfg = FFMLPConfig(
         layer_sizes=(task.dim,) + (args.width,) * args.layers,
         epochs=args.epochs, splits=args.splits, neg_mode="random",
         classifier="goodness", batch_size=64, seed=args.seed)
+    # block_tasks=False: the point of tracing a serve run is the live
+    # interleaving of training and scoring — keep the async overlap
+    tracer = (obs_trace.Tracer(block_tasks=False,
+                               meta={"launcher": "serve"})
+              if args.trace else obs_trace.NOOP)
     res = api.serve(cfg, task, traffic=args.traffic,
                     schedule=args.schedule, num_nodes=args.nodes,
                     rate=args.rate, max_batch=args.max_batch,
                     max_wait_s=args.max_wait, queue_cap=args.queue_cap,
-                    seed=args.seed)
+                    seed=args.seed, trace=tracer)
+    if tracer.enabled:
+        obs_export.export(tracer, args.trace, format=args.trace_format)
+        print(f"trace: {tracer.span_count()} spans -> {args.trace} "
+              f"({args.trace_format})")
     slo = res.slo
     print(f"train-while-serve: schedule={res.schedule} "
           f"nodes={res.num_nodes} traffic={res.traffic}")
@@ -167,6 +177,15 @@ def main(argv=None):
     lm.add_argument("--prompt-len", type=int, default=64)
     lm.add_argument("--gen", type=int, default=32)
     ap.add_argument("--seed", type=int, default=0)
+    from repro.obs import export as obs_export
+    g.add_argument("--trace", default=None, metavar="PATH",
+                   help="record an execution trace (repro.obs; "
+                        "non-blocking tracer, overlap intact) and "
+                        "export it here after the run")
+    g.add_argument("--trace-format", default="chrome",
+                   choices=list(obs_export.names()),
+                   help="trace exporter (choices live from the "
+                        "repro.obs exporter registry)")
     args = ap.parse_args(argv)
     if args.mode == "lm":
         if args.arch is None:

@@ -29,6 +29,7 @@ from repro.configs.ff_mlp import FFMLPConfig
 from repro.core import pff_dag, train as train_lib
 from repro.kernels import ops
 from repro.models import transformer
+from repro.obs import export as obs_export, trace as obs_trace
 
 
 def run_paper_mlp(args):
@@ -47,7 +48,8 @@ def run_paper_mlp(args):
     t0 = time.time()
     res = api.fit(cfg, task, backend=backend, schedule=args.schedule,
                   num_nodes=args.nodes, probe_every=args.probe,
-                  verbose=True)
+                  verbose=True,
+                  trace=getattr(args, "tracer", obs_trace.NOOP))
     wall = time.time() - t0
     acc = f"test acc {res.test_acc:.4f}" if res.test_acc is not None else ""
     print(f"\n[{backend}] {acc}  wall {wall:.1f}s")
@@ -68,6 +70,7 @@ def run_paper_mlp(args):
 
 
 def run_lm(args):
+    tracer = getattr(args, "tracer", obs_trace.NOOP)
     cfg = get_config(args.arch)
     if not args.full:
         cfg = cfg.reduced()
@@ -90,17 +93,19 @@ def run_lm(args):
                                       cfg.d_model), cfg.dtype)
 
     t0 = time.time()
-    for i, tokens in enumerate(data_lib.lm_batches(
-            cfg.vocab, args.batch, args.seq, args.steps, args.seed)):
-        batch = {"tokens": jnp.asarray(tokens)}
-        if aux is not None:
-            batch["aux"] = aux
-        params, opt, metrics = step_fn(params, opt, batch, i + 1)
-        if (i + 1) % args.log_every == 0:
-            m = {k: round(float(v), 4) for k, v in metrics.items()}
-            print(f"step {i + 1}: {m}  ({time.time() - t0:.1f}s)")
+    with tracer.span("train:lm", arch=args.arch, steps=args.steps):
+        for i, tokens in enumerate(data_lib.lm_batches(
+                cfg.vocab, args.batch, args.seq, args.steps, args.seed)):
+            batch = {"tokens": jnp.asarray(tokens)}
+            if aux is not None:
+                batch["aux"] = aux
+            params, opt, metrics = step_fn(params, opt, batch, i + 1)
+            if (i + 1) % args.log_every == 0:
+                m = {k: round(float(v), 4) for k, v in metrics.items()}
+                print(f"step {i + 1}: {m}  ({time.time() - t0:.1f}s)")
     if args.ckpt:
-        checkpoint.save(args.ckpt, params, step=args.steps)
+        checkpoint.save(args.ckpt, params, step=args.steps,
+                        tracer=tracer)
         print("saved", args.ckpt)
     return params
 
@@ -150,13 +155,28 @@ def main():
     ap.add_argument("--log-every", type=int, default=5)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--ckpt", default=None)
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="record an execution trace (repro.obs) and "
+                         "export it here after the run")
+    ap.add_argument("--trace-format", default="chrome",
+                    choices=list(obs_export.names()),
+                    help="trace exporter (choices live from the "
+                         "repro.obs exporter registry); chrome loads "
+                         "in Perfetto / chrome://tracing")
     args = ap.parse_args()
+    args.tracer = (obs_trace.Tracer(meta={"launcher": "train"})
+                   if args.trace else obs_trace.NOOP)
     if args.paper_mlp:
         run_paper_mlp(args)
     elif args.arch:
         run_lm(args)
     else:
         ap.error("need --paper-mlp or --arch")
+    if args.tracer.enabled:
+        obs_export.export(args.tracer, args.trace,
+                          format=args.trace_format)
+        print(f"trace: {args.tracer.span_count()} spans -> {args.trace} "
+              f"({args.trace_format})")
 
 
 if __name__ == "__main__":

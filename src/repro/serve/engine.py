@@ -11,6 +11,15 @@ item 2 names, and the first place two drivers share live weights.
 
 ``repro.api.serve()`` is the supported entry point; this module is the
 machinery behind it.
+
+Observability: every entry point takes ``tracer=`` (an ``obs.trace``
+tracer, default the no-op singleton). The loop records admission /
+batch-form / score spans and shed events; the replica records
+swap-install spans and violation events on the SAME tracer. In
+combined mode ``train_while_serve`` hands that one tracer to the
+executor thread too, so training task spans and serving spans share a
+single clock domain — the whole train-while-serve run is one Perfetto
+timeline.
 """
 from __future__ import annotations
 
@@ -22,6 +31,7 @@ from typing import List, Optional
 import numpy as np
 
 from repro import data as data_lib
+from repro.obs import trace as obs_trace
 from repro.serve.batcher import Batcher
 from repro.serve.bus import WeightBus
 from repro.serve.queue import AdmissionQueue, Request
@@ -81,8 +91,8 @@ def _score_batch(replica: Replica, batch: List[Request], now):
 
 
 def run_serve(replica: Replica, bus: WeightBus, stream: RequestStream,
-              sconfig: ServeConfig, *,
-              producer_done=None) -> EngineResult:
+              sconfig: ServeConfig, *, producer_done=None,
+              tracer=obs_trace.NOOP) -> EngineResult:
     """The continuous-batching loop.
 
     ``producer_done`` (a callable -> bool) marks the training thread's
@@ -94,6 +104,11 @@ def run_serve(replica: Replica, bus: WeightBus, stream: RequestStream,
     n_target = sconfig.n_requests if producer_done is None else None
     if producer_done is None and n_target is None:
         raise ValueError("serve-only mode needs ServeConfig.n_requests")
+    if tracer.enabled:
+        # swap-install spans / violation events land on the loop's
+        # tracer (one clock domain with the executor in combined mode)
+        replica.tracer = tracer
+    t_loop0 = tracer.now()
     queue = AdmissionQueue(sconfig.queue_cap)
     batcher = Batcher(sconfig.max_batch, sconfig.max_wait_s)
     done: List[Request] = []
@@ -118,6 +133,8 @@ def run_serve(replica: Replica, bus: WeightBus, stream: RequestStream,
         #    re-stamped to arrive "now" so their latency is pure
         #    service time, not a fictional negative wait)
         refill()
+        t_admit0 = tracer.now()
+        n_before = admitted
         while upcoming and (draining or upcoming[-1][0] <= t):
             if n_target is not None and admitted >= n_target:
                 break
@@ -129,19 +146,32 @@ def run_serve(replica: Replica, bus: WeightBus, stream: RequestStream,
             if draining:
                 req.t_arrival = t
             req.t_admit = t
-            queue.offer(req)
+            if not queue.offer(req) and tracer.enabled:
+                tracer.event("serve:shed", id=req.id,
+                             depth=len(queue))
             admitted += 1
             refill()
+        if tracer.enabled and admitted > n_before:
+            tracer.add_span("serve:admit", t_admit0,
+                            n=admitted - n_before)
         # 2) hot-swap between batches: a batch in flight is never torn
         replica.maybe_swap(bus, now=t)
         # 3) form + score (only once a first snapshot is installed —
         #    until then arrivals just queue up, shedding on overflow)
         no_more = ((n_target is not None and admitted >= n_target)
                    or (draining and probe_left <= 0))
+        t_form0 = tracer.now()
         batch = (batcher.form(queue, t, flush=no_more)
                  if replica.ready else [])
         if batch:
+            if tracer.enabled:
+                tracer.add_span("serve:batch_form", t_form0,
+                                n=len(batch))
+            t_score0 = tracer.now()
             _score_batch(replica, batch, now)
+            if tracer.enabled:
+                tracer.add_span("serve:score", t_score0, n=len(batch),
+                                version=replica.version)
             done.extend(batch)
             continue
         # 4) termination — serve-only stops once every generated
@@ -163,6 +193,10 @@ def run_serve(replica: Replica, bus: WeightBus, stream: RequestStream,
         time.sleep(_IDLE_SLEEP_S)
 
     replica.drain(bus, now=now())
+    if tracer.enabled:
+        tracer.add_span("serve:loop", t_loop0, requests=len(done),
+                        swaps=len(replica.swaps),
+                        violations=replica.consistency_violations)
     return EngineResult(
         requests=done, swaps=list(replica.swaps),
         consistency_violations=replica.consistency_violations,
@@ -178,30 +212,40 @@ def _make_stream(source, sconfig: ServeConfig, num_classes):
 
 def serve_static(params, cfg, source: data_lib.Source,
                  sconfig: ServeConfig, *, eval_mode="goodness",
-                 impl="auto") -> EngineResult:
+                 impl="auto", tracer=obs_trace.NOOP) -> EngineResult:
     """Serve-only: a fixed params snapshot (version 0), no training
     underneath — the deterministic-replay and benchmark baseline mode."""
     n_layers = len(params["layers"])
     bus = WeightBus(n_layers, has_head="head" in params)
     bus.publish_all(0, params)
     replica = Replica(cfg.num_classes, max_batch=sconfig.max_batch,
-                      eval_mode=eval_mode, impl=impl)
+                      eval_mode=eval_mode, impl=impl, tracer=tracer)
     stream = _make_stream(source, sconfig, cfg.num_classes)
-    return run_serve(replica, bus, stream, sconfig)
+    return run_serve(replica, bus, stream, sconfig, tracer=tracer)
 
 
 def train_while_serve(executor, sconfig: ServeConfig,
                       source: Optional[data_lib.Source] = None,
-                      *, resume_from=None) -> EngineResult:
+                      *, resume_from=None,
+                      tracer=obs_trace.NOOP) -> EngineResult:
     """Run the executor with live publication and serve from the same
     bus concurrently. The training thread's result (or exception) rides
     back on the ``EngineResult``; a training crash stops the serve loop
-    rather than hanging it."""
+    rather than hanging it.
+
+    A traced combined run hands the ONE tracer to both drivers: the
+    executor's task spans (recorded on the ``pff-train`` thread) and
+    the serve loop's spans share a clock domain, so swap installs line
+    up against the chapter-train tasks that published them. Note the
+    default tracer blocks per task (``block_tasks=True``), which slows
+    training and shifts the serve timeline — pass
+    ``Tracer(block_tasks=False)`` to observe serving behavior with
+    training overlap intact."""
     bus = WeightBus(executor.n_layers, has_head=executor.has_head)
     replica = Replica(executor.cfg.num_classes,
                       max_batch=sconfig.max_batch,
                       eval_mode=executor.good.eval_mode(executor.cfg),
-                      impl=executor.impl)
+                      impl=executor.impl, tracer=tracer)
     if source is None:
         source = data_lib.source_of(executor.task)
     stream = _make_stream(source, sconfig, executor.cfg.num_classes)
@@ -211,8 +255,9 @@ def train_while_serve(executor, sconfig: ServeConfig,
     def trainer():
         t0 = time.perf_counter()
         try:
-            box["result"] = executor.run(publish=bus,
-                                         resume_from=resume_from)
+            box["result"] = executor.run(
+                publish=bus, resume_from=resume_from,
+                trace=tracer if tracer.enabled else None)
         except BaseException as e:              # surfaced to the caller
             box["error"] = e
         box["train_s"] = time.perf_counter() - t0
@@ -220,7 +265,8 @@ def train_while_serve(executor, sconfig: ServeConfig,
     th = threading.Thread(target=trainer, name="pff-train", daemon=True)
     th.start()
     out = run_serve(replica, bus, stream, sconfig,
-                    producer_done=lambda: not th.is_alive())
+                    producer_done=lambda: not th.is_alive(),
+                    tracer=tracer)
     th.join()
     out.exec_result = box.get("result")
     out.train_error = box.get("error")

@@ -24,16 +24,19 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import ff_mlp
+from repro.obs import trace as obs_trace
 from repro.serve.bus import WeightBus
 
 
 class Replica:
     def __init__(self, num_classes: int, *, max_batch: int,
-                 eval_mode: str = "goodness", impl: str = "auto"):
+                 eval_mode: str = "goodness", impl: str = "auto",
+                 tracer=obs_trace.NOOP):
         self.num_classes = int(num_classes)
         self.max_batch = int(max_batch)
         self.eval_mode = eval_mode
         self.impl = impl
+        self.tracer = tracer
         self.params: Optional[dict] = None
         self.version: int = -(2 ** 31)        # below any published version
         self.swaps: List[dict] = []           # install log (the timeline)
@@ -59,15 +62,23 @@ class Replica:
                 published_at: float, *, now: float = 0.0) -> bool:
         """Audit + install one snapshot; False (and a counted violation)
         if it breaches the version-vector contract."""
+        t0 = self.tracer.now()
         if not self._vector_ok(version, vec):
             self.consistency_violations += 1
+            if self.tracer.enabled:
+                self.tracer.event("serve:violation", version=version,
+                                  vec=list(vec), installed=self.version)
             return False
         self.params = params
         old = self.version
         self.version = version
+        staleness = max(time.perf_counter() - published_at, 0.0)
         self.swaps.append({
             "t": now, "version": version, "from_version": old,
-            "staleness_s": max(time.perf_counter() - published_at, 0.0)})
+            "staleness_s": staleness})
+        if self.tracer.enabled:
+            self.tracer.add_span("serve:swap_install", t0, version=version,
+                                 from_version=old, staleness_s=staleness)
         return True
 
     def maybe_swap(self, bus: WeightBus, *, now: float = 0.0) -> bool:
