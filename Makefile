@@ -1,6 +1,6 @@
 PY := PYTHONPATH=src python
 
-.PHONY: test lint bench bench-smoke tune-smoke pff-exec-smoke fault-smoke api-smoke serve-smoke trace-smoke
+.PHONY: test lint bench bench-smoke tune-smoke pff-exec-smoke fault-smoke api-smoke serve-smoke trace-smoke lm-exec-smoke bench-digest
 
 test:
 	$(PY) -m pytest -q
@@ -40,6 +40,21 @@ tune-smoke:
 pff-exec-smoke:
 	XLA_FLAGS=--xla_force_host_platform_device_count=4 \
 		$(PY) -m benchmarks.run --only=pff_exec
+
+# LM chapter gate on 4 faked host devices: a tiny qwen2-0.5b (reduced)
+# stack chapter-trained on the real-text BPE source through the real
+# executor — weight stream bit-exact vs sequential train_chapters
+# (all_layers AND single_layer), eval CE within the stated budget of
+# the joint-FF step at equal updates, measured-vs-simulated rows
+# (BENCH_lm_exec.json). Exits non-zero on divergence or CE breach.
+lm-exec-smoke:
+	XLA_FLAGS=--xla_force_host_platform_device_count=4 \
+		$(PY) -m benchmarks.run --only=lm_exec
+
+# Markdown digest of every BENCH_*.json in the repo root (CI appends
+# this to $GITHUB_STEP_SUMMARY; handy locally after `make bench`).
+bench-digest:
+	$(PY) -m benchmarks.digest
 
 # Executor resilience gate on 4 faked host devices: chapter-checkpoint
 # overhead, per-fault recovery cost (crash/delay/drop/corrupt/dead-node)

@@ -1,0 +1,135 @@
+"""Per-leg bench digest: every ``BENCH_*.json`` as a markdown table.
+
+CI appends this module's stdout to ``$GITHUB_STEP_SUMMARY`` after the
+smoke legs so each run's numbers (speedups, makespans, CE, kernel
+errors, failure counts) are readable from the Actions summary page
+without downloading the artifact bundle. Usage:
+
+    python -m benchmarks.digest [dir]       # default: repo root
+
+Pure stdlib on purpose — it must stay runnable even when a smoke leg
+has poisoned the jax process state, and it never imports the benchmark
+modules it summarizes. Raw Chrome traces (``traceEvents`` files) are
+skipped; they are viewer input, not a summary.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+import sys
+
+_MAX_COLS = 8          # keep tables readable on the Actions summary page
+_MAX_ROWS = 12
+_MAX_STR = 40
+# column-name fragments worth a slot, in priority order
+_PREFERRED = ("schedule", "nodes", "name", "kind", "impl", "shape",
+              "speedup", "makespan", "latency", "err", "ce", "acc",
+              "bit_exact", "hits", "util")
+
+
+def _flatten(d, prefix=""):
+    """One level of dict nesting -> dotted keys; scalars only."""
+    out = {}
+    for k, v in d.items():
+        key = f"{prefix}{k}"
+        if isinstance(v, dict):
+            if not prefix:          # flatten one level, no deeper
+                out.update(_flatten(v, prefix=f"{k}."))
+        elif isinstance(v, (list, tuple)):
+            continue
+        else:
+            out[key] = v
+    return out
+
+
+def _fmt(v):
+    if isinstance(v, bool):
+        return "yes" if v else "no"
+    if isinstance(v, float):
+        return f"{v:.4g}"
+    s = str(v)
+    return s if len(s) <= _MAX_STR else s[:_MAX_STR - 1] + "…"
+
+
+def _rank(col):
+    for i, frag in enumerate(_PREFERRED):
+        if frag in col.lower():
+            return i
+    return len(_PREFERRED)
+
+
+def _pick_columns(rows):
+    cols, seen = [], set()
+    for r in rows:
+        for k in r:
+            if k not in seen:
+                seen.add(k)
+                cols.append(k)
+    order = {c: i for i, c in enumerate(cols)}   # stable tiebreak
+    cols.sort(key=lambda c: (_rank(c), order[c]))
+    return cols[:_MAX_COLS]
+
+
+def _table(rows):
+    cols = _pick_columns(rows)
+    if not cols:
+        return []
+    lines = ["| " + " | ".join(cols) + " |",
+             "|" + "|".join("---" for _ in cols) + "|"]
+    for r in rows[:_MAX_ROWS]:
+        lines.append("| " + " | ".join(
+            _fmt(r[c]) if c in r else "" for c in cols) + " |")
+    if len(rows) > _MAX_ROWS:
+        lines.append(f"\n_...{len(rows) - _MAX_ROWS} more rows in the "
+                     "artifact._")
+    return lines
+
+
+def digest_file(path):
+    """Markdown lines summarizing one BENCH json (or None to skip)."""
+    try:
+        with open(path) as f:
+            doc = json.load(f)
+    except (OSError, ValueError) as e:
+        return [f"_unreadable: {e}_"]
+    if not isinstance(doc, dict) or "traceEvents" in doc:
+        return None                      # raw Chrome trace — viewer input
+    lines = []
+    failures = doc.get("failures")
+    if isinstance(failures, list):
+        lines.append("**failures: "
+                     + (f"{len(failures)}** ⚠️" if failures else "0**"))
+        lines.extend(f"- `{_fmt(f)}`" for f in failures[:5])
+        lines.append("")
+    rows = doc.get("rows")
+    if isinstance(rows, list) and rows and isinstance(rows[0], dict):
+        lines.extend(_table([_flatten(r) for r in rows]))
+    scalars = _flatten({k: v for k, v in doc.items()
+                        if k not in ("rows", "failures", "note")})
+    if scalars:
+        lines.append("")
+        lines.extend(_table([{"key": k, "value": v}
+                             for k, v in scalars.items()]))
+    return lines
+
+
+def main(argv=None):
+    root = (argv or sys.argv[1:] or ["."])[0]
+    paths = sorted(glob.glob(os.path.join(root, "BENCH_*.json")))
+    if not paths:
+        print(f"_no BENCH_*.json found in {os.path.abspath(root)}_")
+        return 0
+    print("## Bench digest\n")
+    for path in paths:
+        body = digest_file(path)
+        if body is None:
+            continue
+        print(f"### {os.path.basename(path)}\n")
+        print("\n".join(body))
+        print()
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

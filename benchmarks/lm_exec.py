@@ -1,0 +1,203 @@
+"""LM chapters on the real executor: bit-equality, CE budget, speedup.
+
+The `make lm-exec-smoke` CI gate (ISSUE 10): a tiny qwen2-0.5b-shaped
+transformer stack trained by the paper's chapter schedule on the
+real-text BPE pipeline (``data.text_source``), driven through
+``core/pff_exec.LMExecutor`` across 4 faked devices. Three result
+families land in ``BENCH_lm_exec.json``:
+
+  1. bit-equality rows — the executor's weight stream vs the
+     sequential ``pff_lm.train_chapters`` reference, All-Layers and
+     Single-Layer at N=4 (``benchmarks/run.py`` exits non-zero on any
+     divergence: this is the acceptance-criteria gate),
+  2. an eval-CE row — the chapter-trained model scored by held-out CE
+     against the joint-FF step (``core/train.py``) at an equal
+     per-block update budget on the SAME text source; the gate is
+     ``ce_exec <= ce_joint + ce_budget`` (the schedules optimize the
+     same local objectives, so chapter training must land in the same
+     CE neighborhood),
+  3. measured-vs-simulated rows — warm-cache executor makespan (with
+     the overlap on/off A/B) next to ``pff.simulate_schedule``'s
+     replay of the sequential trainer's task records under the same
+     node assignment.
+
+CPU-container caveat (same as ``benchmarks/pff_exec.py``): the faked
+devices share the host cores, so measured speedup is bounded by the
+core budget — the honest comparison is measured vs simulated under the
+same contention. Needs >= 4 devices: export
+``XLA_FLAGS=--xla_force_host_platform_device_count=4`` before jax is
+imported (``make lm-exec-smoke`` does; this module also sets it when
+imported before jax).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import sys
+
+if "jax" not in sys.modules:                       # pragma: no cover
+    os.environ.setdefault(
+        "XLA_FLAGS", "--xla_force_host_platform_device_count=4")
+
+import jax
+import jax.numpy as jnp
+
+from repro import api, data as data_lib, optim
+from repro.configs import get_config
+from repro.core import pff, pff_exec, pff_lm, train as train_lib
+from repro.models import transformer
+
+NODES = 4
+CE_BUDGET = 1.5          # nats: chapter-FF vs joint-FF at equal updates
+
+
+def _setup(quick):
+    blocks = 4
+    chapters, steps, batch, seq = ((3, 3, 4, 16) if quick
+                                   else (4, 8, 8, 32))
+    cfg = get_config("qwen2-0.5b").reduced()
+    cfg = dataclasses.replace(cfg, num_layers=blocks,
+                              groups=((("attn",), blocks),))
+    source = data_lib.text_source(vocab=cfg.vocab, seq_len=seq, seed=0)
+    return cfg, source, dict(chapters=chapters, steps_per_chapter=steps,
+                             batch=batch, lr=3e-3)
+
+
+def _joint_ff_ce(cfg, source, kw, eval_tokens):
+    """The joint-FF step (core/train.py) at the same per-block update
+    budget on the same text source — the CE yardstick."""
+    params = transformer.init(jax.random.PRNGKey(0), cfg)
+    opt = optim.adam_init(params)
+    step_fn = jax.jit(train_lib.make_ff_train_step(cfg, lr=kw["lr"]))
+    joint_steps = kw["chapters"] * kw["steps_per_chapter"]
+    for i in range(joint_steps):
+        blk = source.blocks("train", kw["batch"], seed=5000 + i)
+        params, opt, _ = step_fn(params, opt,
+                                 {"tokens": jnp.asarray(blk)}, i + 1)
+    return float(train_lib.eval_ce(params, cfg, eval_tokens))
+
+
+def run(quick=True, out_path=None):
+    if out_path is None:
+        out_path = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                                os.pardir, "BENCH_lm_exec.json")
+    cfg, source, kw = _setup(quick)
+    devices = jax.devices()
+    n_dev = len(devices)
+    print(f"devices: {n_dev} x {devices[0].platform}")
+    eval_tokens = jnp.asarray(source.blocks("val", 16, seed=321))
+    ce_init = float(train_lib.eval_ce(
+        transformer.init(jax.random.PRNGKey(0), cfg), cfg, eval_tokens))
+
+    # sequential reference: weight-stream oracle + task timings + CE
+    ref = api.fit(cfg, source, backend="sequential", **kw)
+    print(f"sequential train_chapters: eval CE {ref.eval_ce:.4f} "
+          f"(init {ce_init:.4f}) in {ref.makespan:.1f}s")
+
+    ce_joint = _joint_ff_ce(cfg, source, kw, eval_tokens)
+    results = {
+        "config": {"arch": "qwen2-0.5b (reduced)",
+                   "blocks": cfg.groups[0][1], "vocab": cfg.vocab,
+                   "seq_len": source.seq_len, "bpe_vocab":
+                   int(source.encoder.n_vocab), **{k: v for k, v in
+                                                   kw.items()},
+                   "backend": jax.default_backend(), "devices": n_dev,
+                   "cpu_count": os.cpu_count()},
+        "note": ("measured speedup on a CPU container is bounded by the "
+                 "shared host core budget; compare measured vs simulated "
+                 "under the same contention. CE gate: chapter-FF "
+                 "(sequential AND executor, bit-identical) within "
+                 "ce_budget of the joint-FF step at equal per-block "
+                 "updates on the same BPE text source."),
+        "ce": {"init": round(ce_init, 4), "joint_ff": round(ce_joint, 4),
+               "chapter_seq": round(ref.eval_ce, 4),
+               "budget": CE_BUDGET},
+        "rows": [],
+    }
+    failures = []
+    if ref.eval_ce > ce_joint + CE_BUDGET:
+        failures.append(
+            f"chapter-FF eval CE {ref.eval_ce:.4f} exceeds joint-FF "
+            f"{ce_joint:.4f} + budget {CE_BUDGET}")
+    print(f"joint-FF eval CE {ce_joint:.4f} | chapter-FF "
+          f"{ref.eval_ce:.4f} (budget +{CE_BUDGET})")
+
+    # serial yardstick: the sequential run's per-(kind, layer) median
+    # durations summed — the same compile-outlier smoothing (and the
+    # same denominator) simulate_schedule uses, so measured and
+    # simulated speedups are directly comparable (ref.makespan itself
+    # is cold and would inflate the measured number past N).
+    ref_durs = pff.task_durations(ref.records)
+    serial_s = sum(ref_durs[(r.kind, r.layer)] for r in ref.records)
+    for schedule in ("all_layers", "single_layer"):
+        sim = pff.simulate_schedule(ref.records, schedule, NODES)
+        row = {"schedule": schedule, "nodes": NODES,
+               "sim": {"makespan_s": sim.makespan,
+                       "speedup": sim.speedup,
+                       "utilization": sim.utilization}}
+        if n_dev < NODES:
+            row["measured"] = None
+            row["note"] = (f"needs {NODES} devices, found {n_dev} — set "
+                           "XLA_FLAGS=--xla_force_host_platform_device_"
+                           f"count={NODES} (see make lm-exec-smoke)")
+            results["rows"].append(row)
+            print(f"{schedule:>13} N={NODES}: sim speedup "
+                  f"{sim.speedup:5.2f}x | not measured (too few devices)")
+            continue
+        ex = pff_exec.LMExecutor(cfg, source, schedule, NODES,
+                                 devices=devices, seed=0, **kw)
+        prof = ex.run(profile=True)   # compile warm-up + busy estimate
+        timed = ex.run()              # warm-cache makespan
+        bit = pff_lm.lm_params_bit_equal(ref.params, timed.params)
+        if not bit:
+            failures.append(f"{schedule} N={NODES}: executor weight "
+                            "stream diverged from train_chapters")
+        ce_exec = float(train_lib.eval_ce(timed.params, cfg,
+                                          eval_tokens))
+        ex_off = pff_exec.LMExecutor(cfg, source, schedule, NODES,
+                                     devices=devices, seed=0,
+                                     overlap=False, **kw)
+        ex_off.run()                  # compile warm-up
+        off = ex_off.run()
+        durs = pff.task_durations(prof.records)
+        busy = sum(durs[(r.kind, r.layer)] for r in prof.records)
+        row["weights_bit_exact_vs_sequential"] = bit
+        row["measured"] = {
+            "makespan_s": timed.makespan,
+            "speedup": (serial_s / timed.makespan
+                        if timed.makespan else 1.0),
+            "utilization_est": (min(1.0, busy / (NODES * timed.makespan))
+                                if timed.makespan else 1.0),
+            "eval_ce": round(ce_exec, 4),
+            "handoff": timed.handoff,
+            "makespan_s_no_overlap": off.makespan,
+            "overlap_speedup": (off.makespan / timed.makespan
+                                if timed.makespan else 1.0),
+            "handoff_no_overlap": off.handoff,
+        }
+        results["rows"].append(row)
+        m = row["measured"]
+        print(f"{schedule:>13} N={NODES}: sim speedup {sim.speedup:5.2f}x"
+              f" | measured makespan {m['makespan_s']:6.2f}s "
+              f"speedup {m['speedup']:5.2f}x ce {ce_exec:.4f} | "
+              f"no-overlap {off.makespan:6.2f}s "
+              f"(x{m['overlap_speedup']:.2f}, "
+              f"{m['handoff']['prefetch_hits']} prefetch hits) -> "
+              + ("bit-exact" if bit else "DIVERGED"))
+
+    results["failures"] = failures
+    if n_dev < NODES and os.path.exists(out_path):
+        print(f"only {n_dev} device(s) — keeping existing "
+              f"{os.path.normpath(out_path)} (run `make lm-exec-smoke` "
+              "for the full measurement)")
+        return results
+    with open(out_path, "w") as f:
+        json.dump(results, f, indent=2)
+    print(f"wrote {os.path.normpath(out_path)}")
+    return results
+
+
+if __name__ == "__main__":
+    res = run()
+    sys.exit(1 if res["failures"] else 0)

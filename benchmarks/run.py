@@ -25,9 +25,9 @@ import time
 ERR_BUDGET = 1e-4
 
 
-SECTIONS = ("tables", "lm", "lm_schedules", "lm_negatives", "kernels",
-            "tune", "roofline", "ff_hotloop", "pff_exec", "pff_faults",
-            "serve", "trace")
+SECTIONS = ("tables", "lm", "lm_schedules", "lm_negatives", "lm_exec",
+            "kernels", "tune", "roofline", "ff_hotloop", "pff_exec",
+            "pff_faults", "serve", "trace")
 
 
 def main(argv):
@@ -73,6 +73,13 @@ def main(argv):
               "(random/fixed/adaptive corruption) #####")
         from benchmarks import lm_negatives
         lm_negatives.run()
+
+    if only in (None, "lm_exec"):
+        print("\n##### 2d. LM chapters on the real executor: bit-equality"
+              " + CE budget on the BPE text source (multi-device) #####")
+        from benchmarks import lm_exec
+        res = lm_exec.run(quick=not full)
+        failures.extend(res["failures"])
 
     if only in (None, "kernels"):
         print("\n##### 3. Kernel validation (Pallas interpret vs oracle) "

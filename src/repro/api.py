@@ -113,6 +113,7 @@ class FitResult:
     sim: Optional[pff.SimResult] = None
     profile: Optional[dict] = None
     resilience: Optional[dict] = None
+    eval_ce: Optional[float] = None         # LM chapter backends: val CE
     serve: Optional["ServeResult"] = None   # fit(serve=ServeConfig(...))
     trace: Optional[object] = None          # obs.trace.Tracer (trace=...)
     raw: object = None
@@ -165,7 +166,8 @@ def fit(cfg, task=None, *, backend="sequential", schedule=None,
         num_nodes=1, probe_every=0, verbose=False, profile=False,
         devices=None, overlap=True, resilience=None, resume_from=None,
         serve=None, trace=None, comm_time=0.0, steps=40, batch=8,
-        seq=64, lr=1e-3) -> FitResult:
+        seq=64, lr=1e-3, chapters=4, steps_per_chapter=8,
+        head_lr=None) -> FitResult:
     """Train ``cfg`` on ``task`` with the chosen backend. See the module
     docstring for the backend table.
 
@@ -205,6 +207,17 @@ def fit(cfg, task=None, *, backend="sequential", schedule=None,
     steps/batch/seq/lr: pod backend — pipeline run length and shapes
     (``task`` may be an iterable of token blocks, or None to use the
     synthetic LM corpus).
+
+    Transformer LM configs (``repro.configs.get_config``) on the
+    sequential / executor backends run the CHAPTER schedule
+    (``core.pff_lm`` — per-block train tasks + a per-chapter head task)
+    instead of the FF-MLP path: ``task`` is a ``data.Source`` of token
+    blocks (default: the real-text BPE ``data.text_source``), sized by
+    ``chapters`` x ``steps_per_chapter`` x ``batch`` x ``seq``;
+    ``head_lr`` overrides ``lr`` for the head task. The executor
+    backend drives ``pff_exec.LMExecutor`` across ``num_nodes``
+    devices, bit-exact vs sequential; quality comes back on
+    ``FitResult.eval_ce`` (held-out CE, scored identically for both).
     """
     if backend not in BACKENDS:
         raise ValueError(f"unknown backend {backend!r}; expected one of "
@@ -230,6 +243,24 @@ def fit(cfg, task=None, *, backend="sequential", schedule=None,
             fres = _fit_pod(cfg, task, num_nodes=num_nodes, steps=steps,
                             batch=batch, seq=seq, lr=lr, verbose=verbose)
         fres.trace = out_trace
+        return fres
+
+    if hasattr(cfg, "groups") and backend in ("sequential", "executor"):
+        # transformer LM config -> the chapter schedule (core.pff_lm),
+        # sequential reference or the real LMExecutor
+        if resilience is not None or resume_from is not None \
+                or serve is not None:
+            raise ValueError(
+                "LM chapter schedules do not support resilience/"
+                "resume_from/serve yet (ROADMAP: unify with lm_decode "
+                "serving)")
+        fres = _fit_lm_chapters(
+            cfg, task, backend=backend, schedule=schedule,
+            num_nodes=num_nodes, chapters=chapters,
+            steps_per_chapter=steps_per_chapter, batch=batch, seq=seq,
+            lr=lr, head_lr=head_lr, devices=devices, overlap=overlap,
+            profile=profile, tracer=tracer)
+        fres.trace = fres.trace or out_trace
         return fres
 
     _validate_strategies(cfg)
@@ -425,6 +456,65 @@ def simulate(result_or_records, schedule, num_nodes,
             "records only when profiled or traced with a blocking "
             "tracer — fit(..., profile=True) or fit(..., trace=True))")
     return pff.simulate_schedule(records, schedule, num_nodes, **kw)
+
+
+def _fit_lm_chapters(cfg, source, *, backend, schedule, num_nodes,
+                     chapters, steps_per_chapter, batch, seq, lr,
+                     head_lr, devices, overlap, profile,
+                     tracer=obs_trace.NOOP) -> FitResult:
+    """LM chapter-schedule backends (transformer configs): sequential =
+    ``pff_lm.train_chapters`` (the oracle), executor =
+    ``pff_exec.LMExecutor`` on real devices. Both consume the same
+    ``data.Source`` of token blocks through the same
+    ``chapter_batches`` stream and are scored by the same held-out
+    ``train.eval_ce`` — so the bit-exactness gate extends to the
+    reported CE."""
+    import time
+
+    import jax.numpy as jnp
+
+    from repro.core import pff_lm
+    from repro.core import train as train_lib
+
+    seed = getattr(cfg, "seed", 0) or 0
+    if source is None:
+        source = data_lib.text_source(vocab=cfg.vocab, seq_len=seq,
+                                      seed=seed)
+    if backend == "sequential":
+        data_iter = pff_lm.chapter_batches(source, batch=batch,
+                                           steps=steps_per_chapter)
+        with tracer.span("fit:lm_sequential", chapters=chapters):
+            t0 = time.perf_counter()
+            params, records, losses = pff_lm.train_chapters(
+                cfg, data_iter, chapters=chapters,
+                steps_per_chapter=steps_per_chapter, lr=lr,
+                head_lr=head_lr, seed=seed)
+            makespan = time.perf_counter() - t0
+        fres = FitResult(backend=backend, cfg=cfg, params=params,
+                         schedule="sequential", num_nodes=1,
+                         records=records, makespan=makespan,
+                         history=[(i + 1, l)
+                                  for i, l in enumerate(losses)])
+    else:
+        schedule = schedule or ("sequential" if num_nodes == 1
+                                else "all_layers")
+        ex = pff_exec.LMExecutor(
+            cfg, source, schedule, num_nodes, chapters=chapters,
+            steps_per_chapter=steps_per_chapter, batch=batch, lr=lr,
+            head_lr=head_lr, seed=seed, devices=devices, overlap=overlap)
+        res = ex.run(profile=profile,
+                     trace=tracer if tracer.enabled else None)
+        fres = FitResult(backend=backend, cfg=cfg, params=res.params,
+                         schedule=schedule, num_nodes=num_nodes,
+                         records=res.records, makespan=res.makespan,
+                         profile=({"node_busy": res.node_busy}
+                                  if res.node_busy is not None
+                                  else None),
+                         trace=res.trace, raw=res)
+    # one eval path for BOTH backends: held-out CE on a fixed val draw
+    ev = jnp.asarray(source.blocks("val", 16, seed=321))
+    fres.eval_ce = float(train_lib.eval_ce(fres.params, cfg, ev))
+    return fres
 
 
 def _fit_pod(cfg, task, *, num_nodes, steps, batch, seq, lr, verbose):

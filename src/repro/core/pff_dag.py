@@ -159,7 +159,8 @@ def build_tasks(n_layers: int, splits: int, *, has_head: bool = False,
 def replay_frontier(n_layers: int, splits: int, start_chapter: int, *,
                     has_head: bool = False, has_neg: bool = False,
                     strict_neg: bool = False,
-                    has_local_heads: bool = False) -> List[Task]:
+                    has_local_heads: bool = False,
+                    head_feedback: bool = False) -> List[Task]:
     """The tasks a resumed executor must (re)execute when every chapter
     < ``start_chapter`` has completed — i.e. the DAG restricted to
     chapters >= ``start_chapter``, in canonical order.
@@ -184,7 +185,8 @@ def replay_frontier(n_layers: int, splits: int, start_chapter: int, *,
     for t in frontier:
         for d in deps(t, n_layers, has_head=has_head, has_neg=has_neg,
                       strict_neg=strict_neg,
-                      has_local_heads=has_local_heads):
+                      has_local_heads=has_local_heads,
+                      head_feedback=head_feedback):
             if d.chapter >= start_chapter and d not in seen:
                 raise ValueError(
                     f"chapter {start_chapter} is not a valid replay "
@@ -195,8 +197,15 @@ def replay_frontier(n_layers: int, splits: int, start_chapter: int, *,
 
 def deps(task: Task, n_layers: int, *, has_head: bool = False,
          has_neg: bool = False, strict_neg: bool = False,
-         has_local_heads: bool = False) -> List[Task]:
-    """Direct dependencies of ``task`` (see module docstring)."""
+         has_local_heads: bool = False,
+         head_feedback: bool = False) -> List[Task]:
+    """Direct dependencies of ``task`` (see module docstring).
+
+    head_feedback: LM chapters with tied embeddings — the head task
+    updates the shared embed table, and every chapter-c train task
+    embeds its tokens with the post-head-(c-1) table. The edge is
+    recorded at layer 0 only; layers > 0 inherit it through their
+    train(k-1, c) chain, so the closure is unchanged."""
     k, c = task.layer, task.chapter
     out: List[Task] = []
     if task.kind == "train":
@@ -209,6 +218,8 @@ def deps(task: Task, n_layers: int, *, has_head: bool = False,
                 # layer's local head, so it consumes the head weights
                 # produced by chapter-(c-1)'s local_head task
                 out.append(Task("local_head", k, c - 1))
+            if has_head and head_feedback and k == 0:
+                out.append(Task("head", n_layers, c - 1))
         if k == 0 and c > 0 and has_neg and strict_neg:
             out.append(Task("neg_gen", -1, c - 1))
     elif task.kind == "local_head":

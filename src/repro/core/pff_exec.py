@@ -116,8 +116,9 @@ import jax.numpy as jnp
 
 from repro import checkpoint as checkpoint_lib, data as data_lib, optim
 from repro.core import faults as faults_lib
-from repro.core import ff, ff_mlp, pff, pff_dag, strategies
+from repro.core import ff, ff_mlp, pff, pff_dag, pff_lm, strategies
 from repro.launch import mesh as mesh_lib
+from repro.models import transformer
 from repro.obs import trace as obs_trace
 
 
@@ -127,12 +128,29 @@ class ExecResult:
     schedule: str
     num_nodes: int
     makespan: float                        # seconds, first dispatch -> ready
-    test_acc: float
+    test_acc: Optional[float]              # None for LM runs (use eval CE)
     records: Optional[List[pff.TaskRecord]]  # per-task durations (traced)
     node_busy: Optional[List[float]]         # per-node busy seconds (traced)
     handoff: Optional[dict] = None           # transfer-slot counters
     resilience: Optional[dict] = None        # retry/checkpoint/fault stats
     trace: Optional[object] = None           # obs.trace.Tracer, if traced
+
+
+def _records_from_spans(tracer, span0, num_nodes):
+    """(records, node_busy) derived from the ``task:*`` spans of one
+    run — the traced-profile view both executors share (same order and
+    blocked durations the old ``profile=True`` path collected, so
+    ``pff.simulate_schedule`` replays traced runs unchanged)."""
+    records = []
+    node_busy = [0.0] * num_nodes
+    for s in tracer.snapshot(start=span0):
+        if not s.name.startswith("task:"):
+            continue
+        a = s.attrs
+        records.append(pff.TaskRecord(a["kind"], a["layer"],
+                                      a["chapter"], s.duration))
+        node_busy[a["node"]] += s.duration
+    return records, node_busy
 
 
 class _ShardDropped(Exception):
@@ -1056,20 +1074,8 @@ class PFFExecutor:
                               impl=self.impl)
         records = node_busy = None
         if timeline:
-            # satellite of the obs subsystem: records/node_busy are no
-            # longer a separate ad-hoc profiling path — they are a VIEW
-            # of the task spans (same order, same blocked durations the
-            # old profile=True collected), so pff.simulate_schedule
-            # replays traced runs unchanged
-            records = []
-            node_busy = [0.0] * self.num_nodes
-            for s in tracer.snapshot(start=span0):
-                if not s.name.startswith("task:"):
-                    continue
-                a = s.attrs
-                records.append(pff.TaskRecord(a["kind"], a["layer"],
-                                              a["chapter"], s.duration))
-                node_busy[a["node"]] += s.duration
+            records, node_busy = _records_from_spans(tracer, span0,
+                                                     self.num_nodes)
         res_stats = None
         if rc is not None or resume_from is not None:
             res_stats = dict(self._rstats)
@@ -1116,6 +1122,257 @@ def params_bit_equal(a, b, *, with_head=False, with_local_heads=False):
               and all(leaves_equal(pa, pb) for pa, pb in
                       zip(a["local_heads"], b["local_heads"])))
     return ok
+
+
+class LMExecutor:
+    """Runs the LM chapter schedule (``core.pff_lm``) for real on
+    ``num_nodes`` devices — the transformer sibling of ``PFFExecutor``,
+    sharing its DAG (``pff_dag``), its ``_Handoff`` transfer slots, its
+    tracer conventions, and its oracle discipline.
+
+    Bit-exactness: every task replays the EXACT jitted calls of the
+    sequential reference ``pff_lm.train_chapters`` — the same
+    ``make_block_step``/``make_head_step`` programs, the same
+    ``chapter_batches`` stream (regenerated locally per node: the
+    ``data.Source`` purity contract means training data never crosses
+    the hand-off), and the same global step counters. The jit takes
+    FULL (params, opt) pytrees, so each task assembles one from a
+    per-node replicated template: the live slices (Algorithm-1 frozen
+    prefix params, the task's own block state, the tied-embed head
+    params) arrive through the ``_Handoff`` slots, and every other
+    slice keeps its template (initial) value — provably dead inputs of
+    the jitted program (the extracted outputs depend only on the live
+    slices), so the filler can never affect the weight stream. All
+    assembly is ``device_put`` / ``.at[k].set`` — pure data movement.
+
+    Hand-off traffic per train(k, c): the block's full (params, m, v)
+    state streams to the node that trains it in chapter c+1
+    (``("state", k)``), and its params-only copy fans out to the
+    Algorithm-1 forward-recompute / head consumers within chapter c
+    (``("params", k)``) — both driven by ``pff_dag.handoff_targets``.
+    The head task additionally publishes its full state toward the
+    next chapter's head node (``("head",)``) and — tied embeddings
+    only — its params toward every chapter-(c+1) train node
+    (``("headp",)``): that is the DAG's ``head_feedback`` edge (the
+    embed table every block task reads is the post-head one).
+    """
+
+    def __init__(self, cfg, source, schedule: str, num_nodes: int, *,
+                 chapters: int, steps_per_chapter: int, batch: int = 8,
+                 lr: float = 1e-3, head_lr: Optional[float] = None,
+                 seed: int = 0, devices=None, overlap: bool = True):
+        if schedule not in ("sequential", "single_layer", "all_layers"):
+            raise ValueError(
+                f"LM chapter executor supports sequential / single_layer"
+                f" / all_layers; got {schedule!r} (federated LM shards "
+                f"are ROADMAP work)")
+        if schedule == "sequential" and num_nodes != 1:
+            raise ValueError("sequential means num_nodes=1")
+        if len(cfg.groups) != 1:
+            raise ValueError("chapter schedule needs a uniform stack "
+                             f"(one group); got {len(cfg.groups)}")
+        self.cfg = cfg
+        self.source = source
+        self.schedule = schedule
+        self.num_nodes = num_nodes
+        self.chapters = chapters
+        self.steps_per_chapter = steps_per_chapter
+        self.overlap = overlap
+        self.seed = seed
+        self.devices = (list(devices)[:num_nodes] if devices is not None
+                        else mesh_lib.pff_node_devices(num_nodes))
+        self.n_layers = cfg.groups[0][1]
+        self.tied = bool(cfg.tie_embeddings)
+        self._head_names = pff_lm.head_param_names(cfg)
+        self._step = pff_lm.make_block_step(cfg, lr=lr, seed=seed)
+        self._head_step = pff_lm.make_head_step(
+            cfg, head_lr=lr if head_lr is None else head_lr)
+        self._data = pff_lm.chapter_batches(source, batch=batch,
+                                            steps=steps_per_chapter)
+        self._tracer = obs_trace.NOOP
+        self._block = False
+
+    def _finish_task(self, node, kind, layer, chapter, t0, out):
+        if self._block:
+            jax.block_until_ready(out)
+        tr = self._tracer
+        if tr.enabled:
+            tr.add_span("task:" + kind, t0, kind=kind, layer=layer,
+                        chapter=chapter, node=node)
+
+    def _train_task(self, k, chapter, node):
+        """One per-block chapter task: assemble the full trees on the
+        node, replay ``steps_per_chapter`` sequential block steps with
+        the sequential trainer's global step numbers, publish toward
+        the DAG consumers."""
+        t0 = self._tracer.now()
+        dev = self.devices[node]
+        tp, to = self._tmpl[node]
+        gp = tp["groups"][0]
+        for j in range(k):
+            # Algorithm-1 frozen prefix: block j at chapter `chapter`
+            assert self._ver[j] == chapter, (j, self._ver[j], chapter)
+            pj = self._handoff.take(("params", j), node, chapter,
+                                    self._blk[j][0])
+            gp = pff_lm._set_unit(gp, pj, j)
+        up, um, uv = self._handoff.take(("state", k), node, self._ver[k],
+                                        self._blk[k])
+        gp = pff_lm._set_unit(gp, up, k)
+        gm = pff_lm._set_unit(to["m"]["groups"][0], um, k)
+        gv = pff_lm._set_unit(to["v"]["groups"][0], uv, k)
+        p = dict(tp)
+        p["groups"] = (gp,)
+        if self.tied:
+            # head_feedback edge: the embed table this task reads is
+            # the one head(chapter-1) produced
+            hp = self._handoff.take(("headp",), node, self._head_ver,
+                                    self._head[0])
+            for name in self._head_names:
+                p[name] = hp[name]
+        opt = {"m": {**to["m"], "groups": (gm,)},
+               "v": {**to["v"], "groups": (gv,)}}
+        base = (chapter * self.n_layers + k) * self.steps_per_chapter
+        last = None
+        for s, batch in enumerate(self._data(chapter, k)):
+            p, opt, last = self._step(p, opt, jax.device_put(batch, dev),
+                                      k, base + s + 1)
+        self._blk[k] = (pff_lm._slice_unit(p["groups"][0], k),
+                        pff_lm._slice_unit(opt["m"]["groups"][0], k),
+                        pff_lm._slice_unit(opt["v"]["groups"][0], k))
+        self._ver[k] = chapter
+        nxt, param_nodes = pff_dag.handoff_targets(
+            self.schedule, self.num_nodes, n_layers=self.n_layers,
+            splits=self.chapters, layer=k, chapter=chapter,
+            has_head=True, has_neg=False)
+        if nxt is not None:
+            self._handoff.prefetch(("state", k), nxt, chapter,
+                                   self._blk[k])
+        for pn in param_nodes:
+            self._handoff.prefetch(("params", k), pn, chapter,
+                                   self._blk[k][0])
+        self._finish_task(node, "train", k, chapter, t0, last)
+
+    def _head_task(self, chapter, node):
+        """The per-chapter softmax-head task: frozen forward through
+        every chapter-c block, CE on the head subset (``pff_lm.
+        make_head_step``), head state published toward chapter c+1."""
+        t0 = self._tracer.now()
+        dev = self.devices[node]
+        tp, to = self._tmpl[node]
+        gp = tp["groups"][0]
+        for j in range(self.n_layers):
+            assert self._ver[j] == chapter, (j, self._ver[j], chapter)
+            pj = self._handoff.take(("params", j), node, chapter,
+                                    self._blk[j][0])
+            gp = pff_lm._set_unit(gp, pj, j)
+        hp, hm, hv = self._handoff.take(("head",), node, self._head_ver,
+                                        self._head)
+        p = dict(tp)
+        p["groups"] = (gp,)
+        m, v = dict(to["m"]), dict(to["v"])
+        for name in self._head_names:
+            p[name], m[name], v[name] = hp[name], hm[name], hv[name]
+        opt = {"m": m, "v": v}
+        base = chapter * self.steps_per_chapter
+        last = None
+        for s, batch in enumerate(self._data(chapter, self.n_layers)):
+            p, opt, last = self._head_step(
+                p, opt, jax.device_put(batch, dev), base + s + 1)
+        self._head = ({n: p[n] for n in self._head_names},
+                      {n: opt["m"][n] for n in self._head_names},
+                      {n: opt["v"][n] for n in self._head_names})
+        self._head_ver = chapter
+        if chapter + 1 < self.chapters:
+            nh = pff_dag.head_node_of(self.schedule, self.num_nodes,
+                                      n_layers=self.n_layers,
+                                      chapter=chapter + 1)
+            if nh != node:
+                self._handoff.prefetch(("head",), nh, chapter,
+                                       self._head)
+            if self.tied:
+                for tn in pff_dag.chapter_train_nodes(
+                        self.schedule, self.num_nodes, self.n_layers,
+                        chapter=chapter + 1):
+                    if tn != node:
+                        self._handoff.prefetch(("headp",), tn, chapter,
+                                               self._head[0])
+        self._finish_task(node, "head", self.n_layers, chapter, t0, last)
+
+    def run(self, *, profile: bool = False, trace=None) -> ExecResult:
+        """Executes the LM chapter schedule once. Same tracer/profile
+        semantics as ``PFFExecutor.run`` (``records``/``node_busy``
+        derive from the ``task:*`` spans when they carry blocked
+        durations); ``test_acc`` is None — LM quality is eval CE,
+        computed by the facade (``api.fit`` → ``FitResult.eval_ce``)
+        so the sequential and executor paths are scored identically."""
+        cfg = self.cfg
+        tracer = obs_trace.as_tracer(trace)
+        if profile and not tracer.enabled:
+            tracer = obs_trace.Tracer()
+        self._tracer = tracer
+        self._block = profile or (tracer.enabled and tracer.block_tasks)
+        timeline = tracer.enabled and self._block
+        span0 = tracer.span_count()
+        params = transformer.init(jax.random.PRNGKey(self.seed), cfg)
+        opt = optim.adam_init(params)
+        gp, gm, gv = (params["groups"][0], opt["m"]["groups"][0],
+                      opt["v"]["groups"][0])
+        # canonical state partition: per-block unit slices + head subset
+        self._blk = [(pff_lm._slice_unit(gp, k),
+                      pff_lm._slice_unit(gm, k),
+                      pff_lm._slice_unit(gv, k))
+                     for k in range(self.n_layers)]
+        self._head = tuple({n: t[n] for n in self._head_names}
+                           for t in (params, opt["m"], opt["v"]))
+        self._ver = [-1] * self.n_layers
+        self._head_ver = -1
+        self._handoff = _Handoff(self.devices, self.overlap,
+                                 tracer=tracer)
+        t_start = time.perf_counter()
+        t_trace0 = tracer.now()
+        # initial placement rides the timed window (like PFFExecutor):
+        # one full (params, opt) template per node — dead-slice filler
+        # the per-task assembly overwrites with the live hand-off bits
+        self._tmpl = {node: jax.device_put((params, opt), dev)
+                      for node, dev in enumerate(self.devices)}
+        for c in range(self.chapters):
+            for k in range(self.n_layers):
+                self._train_task(k, c, pff_dag.node_of(
+                    self.schedule, self.num_nodes, layer=k, chapter=c))
+            self._head_task(c, pff_dag.head_node_of(
+                self.schedule, self.num_nodes, n_layers=self.n_layers,
+                chapter=c))
+        outs = [s[0] for s in self._blk] + [self._head[0]]
+        jax.block_until_ready(outs)
+        makespan = time.perf_counter() - t_start
+        if tracer.enabled:
+            tracer.add_span(
+                "run", t_trace0, schedule=self.schedule,
+                num_nodes=self.num_nodes, splits=self.chapters,
+                n_layers=self.n_layers, has_head=True, has_neg=False,
+                strict_neg=False, head_feedback=self.tied,
+                start_chapter=0, overlap=self.overlap,
+                blocked=self._block, makespan_s=makespan)
+        # reassemble the canonical full params pytree on node 0 —
+        # exactly the tree the sequential trainer returns
+        dev0 = self.devices[0]
+        fgp = jax.device_put(params["groups"][0], dev0)
+        for k in range(self.n_layers):
+            fgp = pff_lm._set_unit(
+                fgp, jax.device_put(self._blk[k][0], dev0), k)
+        final = dict(jax.device_put(params, dev0))
+        final["groups"] = (fgp,)
+        for name in self._head_names:
+            final[name] = jax.device_put(self._head[0][name], dev0)
+        records = node_busy = None
+        if timeline:
+            records, node_busy = _records_from_spans(tracer, span0,
+                                                     self.num_nodes)
+        self._block = False
+        return ExecResult(final, self.schedule, self.num_nodes, makespan,
+                          None, records, node_busy,
+                          dict(self._handoff.stats), None,
+                          tracer if tracer.enabled else None)
 
 
 # ---------------------------------------------------------------------------
@@ -1250,6 +1507,78 @@ _MATRIX = (
 _AB_CASES = (1, 3, 6)
 
 
+def _lm_case_setup(n_blocks, tied, *, seq_len=16):
+    """The (cfg, source) every LM selftest case trains: a tiny
+    qwen2-0.5b-shaped stack over the real-text BPE source — the same
+    construction ``benchmarks/lm_exec.py`` and ``tests/test_pff_lm.py``
+    use."""
+    from repro.configs import get_config
+
+    cfg = get_config("qwen2-0.5b").reduced()
+    cfg = dataclasses.replace(cfg, num_layers=n_blocks,
+                              groups=((("attn",), n_blocks),))
+    if not tied:
+        cfg = dataclasses.replace(cfg, tie_embeddings=False)
+    source = data_lib.text_source(vocab=cfg.vocab, seq_len=seq_len,
+                                  seed=0)
+    return cfg, source
+
+
+def _lm_check_case(schedule, nodes, n_blocks, chapters, steps, tied, *,
+                   check_overlap_ab=False):
+    """Trains one LM config both ways — through ``api.fit`` — and
+    returns failure strings (empty = the executor reproduced the
+    sequential ``train_chapters`` weight stream bit-exactly)."""
+    from repro import api
+
+    cfg, source = _lm_case_setup(n_blocks, tied)
+    kw = dict(chapters=chapters, steps_per_chapter=steps, batch=4,
+              lr=1e-3)
+    ref = api.fit(cfg, source, backend="sequential", **kw)
+    res = api.fit(cfg, source, backend="executor", schedule=schedule,
+                  num_nodes=nodes, **kw)
+    failures = []
+    if not pff_lm.lm_params_bit_equal(ref.params, res.params):
+        failures.append(f"lm {schedule}: executor weight stream "
+                        f"diverged from sequential train_chapters "
+                        f"(tied={tied})")
+    if check_overlap_ab:
+        off = api.fit(cfg, source, backend="executor", schedule=schedule,
+                      num_nodes=nodes, overlap=False, **kw)
+        stats_on, stats_off = res.raw.handoff, off.raw.handoff
+        if not pff_lm.lm_params_bit_equal(off.params, res.params):
+            failures.append(f"lm {schedule}: overlap-on vs overlap-off "
+                            "weight streams diverged")
+        if stats_off["prefetch_issued"] != 0:
+            failures.append(f"lm {schedule}: overlap=False still issued "
+                            f"{stats_off['prefetch_issued']} prefetches")
+        if nodes > 1 and stats_on["prefetch_hits"] == 0:
+            failures.append(f"lm {schedule}: overlap=True never hit a "
+                            f"prefetched slot ({stats_on})")
+        print(f"  lm overlap A/B {schedule}: on={stats_on} "
+              f"off={stats_off}")
+    print(f"devices={len(jax.devices())} lm schedule={schedule} "
+          f"nodes={nodes} blocks={n_blocks} tied={tied}: "
+          f"exec ce={res.eval_ce:.4f} seq ce={ref.eval_ce:.4f} "
+          f"makespan={res.makespan:.2f}s -> "
+          + ("FAIL" if failures else "bit-exact"))
+    return failures
+
+
+# (schedule, nodes, n_blocks, chapters, steps_per_chapter, tied)
+# Row 1/2: the acceptance-criteria pair — both paper schedules, N=4
+# faked devices, tied embeddings (the head_feedback edge: every block
+# task must see the post-head embed table), with the overlap A/B gate.
+# Row 3: untied head (lm_head path) + nodes not dividing the block
+# count, so the single_layer round-robin wraps.
+_LM_MATRIX = (
+    ("all_layers", 4, 4, 3, 2, True),
+    ("single_layer", 4, 4, 3, 2, True),
+    ("single_layer", 2, 3, 2, 2, False),
+)
+_LM_AB_CASES = (0, 1)
+
+
 def _resilience_case(args):
     """One resilience run from the CLI: inject ``--fault-plan``, write
     chapter manifests into ``--checkpoint-dir``, resume from
@@ -1310,6 +1639,11 @@ def _selftest(argv=None):
                    help="run the full schedule/neg/classifier matrix "
                         "in one process (what tests/test_pff_exec.py "
                         "invokes)")
+    p.add_argument("--lm-matrix", action="store_true",
+                   help="run the LM chapter-schedule bit-exactness "
+                        "matrix (executor vs pff_lm.train_chapters on "
+                        "the real-text BPE source; what "
+                        "tests/test_pff_lm.py invokes)")
     p.add_argument("--nodes", type=int, default=4)
     p.add_argument("--schedule", default="all_layers",
                    choices=list(pff_dag.SCHEDULES))
@@ -1344,6 +1678,13 @@ def _selftest(argv=None):
         for i, case in enumerate(_MATRIX):
             failures += _check_case(*case, check_sim_bound=i == 0,
                                     check_overlap_ab=i in _AB_CASES)
+    elif args.lm_matrix:
+        for i, case in enumerate(_LM_MATRIX):
+            failures += _lm_check_case(
+                *case, check_overlap_ab=i in _LM_AB_CASES)
+        if not failures:
+            print("lm selftest OK: executor chapter schedule bit-exact "
+                  "vs train_chapters on the BPE text source")
     else:
         failures = _check_case(args.schedule, args.nodes, args.splits,
                                args.n_train, args.neg_mode,

@@ -25,8 +25,9 @@ import jax.numpy as jnp
 
 from repro import optim
 from repro.core import ff
+from repro.core import train as train_lib
 from repro.core.pff import TaskRecord
-from repro.models import blocks, transformer
+from repro.models import blocks, common, transformer
 from repro.models.mlp import NO_DIST
 
 
@@ -106,22 +107,107 @@ def make_block_step(cfg, *, lr=1e-3, seed=0, theta=None):
     return step
 
 
+def head_param_names(cfg):
+    """The per-chapter head task's parameter subset: ``final_norm``
+    plus the softmax weights — the tied embedding table (which then
+    doubles as the paper's softmax layer, exactly like the joint step
+    in ``core/train.py``) or the untied ``lm_head``."""
+    return ("final_norm", "embed" if cfg.tie_embeddings else "lm_head")
+
+
+def make_head_step(cfg, *, head_lr=1e-3):
+    """Returns head_step(params, opt, batch, step_no) — the per-chapter
+    softmax-head task (DAG ``Task("head", n_layers, c)``): a frozen
+    forward through ALL blocks, then local CE on the head subset only
+    (``head_param_names``). Mirrors the joint step's head treatment:
+    features are stop-gradded, so a tied table receives the CE grad
+    only through the unembed."""
+    assert len(cfg.groups) == 1, "chapter schedule needs a uniform stack"
+    pattern, _ = cfg.groups[0]
+    names = head_param_names(cfg)
+
+    @jax.jit
+    def head_step(params, opt_state, batch, step_no):
+        tokens = batch["tokens"]
+        inp, labels = tokens[:, :-1], tokens[:, 1:]
+        x = jnp.take(params["embed"], inp, axis=0)
+        ctx = {"causal": True, "dist": NO_DIST}
+
+        def fwd_body(carry, unit_p):
+            h = carry
+            for kind, bp in zip(pattern, unit_p):
+                h, _ = blocks.block_apply(bp, cfg, kind, h, ctx)
+            return h, None
+
+        x, _ = jax.lax.scan(fwd_body, x, params["groups"][0])
+        x = jax.lax.stop_gradient(x)
+
+        def head_loss(hp):
+            h = common.rms_norm(x, hp["final_norm"], cfg.norm_eps)
+            w = hp["embed"] if cfg.tie_embeddings else hp["lm_head"].T
+            ones = jnp.ones(labels.shape, jnp.float32)
+            total = train_lib._ce_chunked(h, w, labels, ones,
+                                          softcap=cfg.logit_softcap)
+            return total / labels.size
+
+        hp = {k: params[k] for k in names}
+        loss, grads = jax.value_and_grad(head_loss)(hp)
+        new_hp, st = optim.adam_update(
+            hp, grads,
+            {"m": {k: opt_state["m"][k] for k in names},
+             "v": {k: opt_state["v"][k] for k in names}},
+            lr=head_lr, step=step_no)
+        new_params = dict(params)
+        new_m = dict(opt_state["m"])
+        new_v = dict(opt_state["v"])
+        for k in names:
+            new_params[k] = new_hp[k]
+            new_m[k] = st["m"][k]
+            new_v[k] = st["v"][k]
+        return new_params, {"m": new_m, "v": new_v}, loss
+
+    return head_step
+
+
+def chapter_batches(source, *, batch, steps):
+    """The canonical (chapter, task)-addressed batch stream over a
+    ``data.TextSource``-style source: a pure function of its arguments
+    (the ``data.Source`` contract), so the sequential trainer and EVERY
+    executor node regenerate identical batches locally — training data
+    never crosses the hand-off. The head task is addressed as
+    ``block = n_blocks`` (its DAG layer index)."""
+    def data_iter(chapter, block):
+        blk = source.blocks("train", batch * steps,
+                            seed=chapter * 1009 + block)
+        for s in range(steps):
+            yield {"tokens": jnp.asarray(blk[s * batch:(s + 1) * batch])}
+    return data_iter
+
+
 def train_chapters(cfg, data_iter_fn, *, chapters, steps_per_chapter,
                    lr=1e-3, head_lr=None, seed=0):
     """Runs the chapter schedule; returns (params, records, ff_losses).
 
-    data_iter_fn(chapter, block) -> iterable of batches for that task.
+    data_iter_fn(chapter, block) -> iterable of batches for that task;
+    the per-chapter head task draws ``data_iter_fn(c, n_blocks)``.
     The LM head (final_norm + lm_head/embed-as-softmax) trains at the
-    end of each chapter, like the paper's softmax layer.
+    end of each chapter, like the paper's softmax layer, at ``head_lr``
+    (default: ``lr``); its ``TaskRecord("head", n_blocks, c)`` rides
+    the same record stream the simulator consumes. ``ff_losses`` stays
+    train-task-only (one FF loss per block task, the historical
+    contract) — head CE is observable through ``train.eval_ce``.
     """
     key = jax.random.PRNGKey(seed)
     params = transformer.init(key, cfg)
     opt = optim.adam_init(params)
     step = make_block_step(cfg, lr=lr, seed=seed)
+    head_step = make_head_step(
+        cfg, head_lr=lr if head_lr is None else head_lr)
     _, repeat = cfg.groups[0][0], cfg.groups[0][1]
     records: List[TaskRecord] = []
     losses = []
     n = 0
+    n_head = 0
     for c in range(chapters):
         for k in range(repeat):
             t0 = time.perf_counter()
@@ -133,4 +219,22 @@ def train_chapters(cfg, data_iter_fn, *, chapters, steps_per_chapter,
             records.append(TaskRecord("train", k, c,
                                       time.perf_counter() - t0))
             losses.append(float(last))
+        t0 = time.perf_counter()
+        last = None
+        for batch in data_iter_fn(c, repeat):
+            n_head += 1
+            params, opt, last = head_step(params, opt, batch, n_head)
+        jax.block_until_ready(last)
+        records.append(TaskRecord("head", repeat, c,
+                                  time.perf_counter() - t0))
     return params, records, losses
+
+
+def lm_params_bit_equal(a, b) -> bool:
+    """True iff two transformer params pytrees are BIT-identical on
+    every leaf — the LM executor's correctness oracle (the transformer
+    analog of ``pff_exec.params_bit_equal``)."""
+    fa, fb = jax.tree.leaves(a), jax.tree.leaves(b)
+    return (jax.tree.structure(a) == jax.tree.structure(b)
+            and all(bool(jnp.array_equal(x, y))
+                    for x, y in zip(fa, fb)))

@@ -6,9 +6,13 @@ is close to linearly separable (98%+ reachable, like MNIST); ``cifar_like``
 uses heavier noise + class-overlapping prototypes (much harder, mimicking
 the paper's CIFAR-10 gap).
 
-LM task: a random first-order Markov chain over the vocabulary with a
+LM tasks: a random first-order Markov chain over the vocabulary with a
 Zipf-ish stationary marginal — gives next-token structure a model can
-learn (CE well below uniform) while being fully deterministic.
+learn (CE well below uniform) while being fully deterministic — and,
+since the LM-executor PR, REAL text: ``TextSource`` samples fixed-shape
+token blocks from the checked-in corpus sample through the self-trained
+byte-level BPE tokenizer (``repro.data.encoder``), same purity
+contract.
 
 Streaming sources: every generator is a pure function of (seed, split) —
 a node in a distributed/federated run, or a serving-traffic generator,
@@ -260,3 +264,82 @@ def lm_batches(vocab, batch, seq_len, steps, seed=0):
     chain = MarkovLM(min(vocab, 4096), seed)
     for s in range(steps):
         yield chain.sample(batch, seq_len + 1, seed * 100003 + s) % vocab
+
+
+# ---------------------------------------------------------------------------
+# Language modelling (real text through the byte-level BPE pipeline)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class TextSource:
+    """Real text as a streaming ``Source``: the checked-in corpus,
+    tokenized once by the byte-level BPE encoder (``data.encoder``),
+    sampled as fixed-shape ``(n, seq_len + 1)`` int32 token blocks.
+
+    ``blocks(split, n, seed)`` — the LM-native sampler — draws ``n``
+    random windows from the split's region of the token stream and is a
+    pure function of ``(split, n, seed)`` (the ``Source`` contract):
+    every node of a distributed run regenerates its batches locally, so
+    training data never crosses the hand-off. "train" windows come
+    from the leading ``1 - holdout`` fraction of the stream, any other
+    split ("val" / "test" / ...) from the held-out tail, so eval never
+    sees training positions. ``sample`` adapts the same windows to the
+    protocol's ``(x, y)`` shape (x = the window's first ``seq_len``
+    tokens, y = the next token) — tokens, not pixels; consumers that
+    need the full block use ``blocks``.
+    """
+    ids: np.ndarray          # (T,) int32 — the tokenized corpus
+    encoder: object          # data.encoder.Encoder (vocab/round-trip)
+    seq_len: int
+    seed: int = 0
+    holdout: float = 0.1
+
+    @property
+    def num_classes(self) -> int:
+        return int(self.encoder.n_vocab)
+
+    @property
+    def vocab(self) -> int:
+        return self.num_classes
+
+    @property
+    def dim(self) -> int:
+        return self.seq_len
+
+    def _region(self, split: str) -> np.ndarray:
+        cut = int(len(self.ids) * (1.0 - self.holdout))
+        return self.ids[:cut] if split == "train" else self.ids[cut:]
+
+    def blocks(self, split: str, n: int, seed: int = 0) -> np.ndarray:
+        """(n, seq_len + 1) int32 token windows, deterministic per
+        (split, n, seed)."""
+        region = self._region(split)
+        span = self.seq_len + 1
+        if len(region) < span:
+            raise ValueError(
+                f"split {split!r} holds {len(region)} tokens < "
+                f"seq_len + 1 = {span}")
+        rng = _split_rng(self.seed, split, seed)
+        offs = rng.integers(0, len(region) - span + 1, size=n)
+        return region[offs[:, None] + np.arange(span)].astype(np.int32)
+
+    def sample(self, split: str, n: int, seed: int = 0):
+        b = self.blocks(split, n, seed)
+        return b[:, :-1], b[:, -1].astype(np.int32)
+
+
+@functools.lru_cache(maxsize=None)
+def text_source(vocab: int = 512, seq_len: int = 32,
+                seed: int = 0) -> TextSource:
+    """The default real-text LM source: BPE encoder trained on the
+    checked-in corpus sample, corpus tokenized once (memoized).
+    ``vocab`` must cover the encoder's vocabulary (reduced LM configs
+    use 512)."""
+    from repro.data import encoder as encoder_lib
+
+    enc = encoder_lib.default_encoder(min(vocab, 512))
+    if enc.n_vocab > vocab:
+        raise ValueError(f"config vocab {vocab} < encoder vocab "
+                         f"{enc.n_vocab}")
+    ids = np.asarray(enc.encode(encoder_lib.corpus_text()), np.int32)
+    return TextSource(ids=ids, encoder=enc, seq_len=seq_len, seed=seed)

@@ -8,11 +8,19 @@ Two modes:
     reduced configs run for real; the full configs are exercised by
     ``dryrun.py``.
 
+``--arch`` with ``--chapters N`` switches from the joint FF step to the
+paper's CHAPTER schedule on the real-text BPE source (``data.
+text_source``) — sequentially, or on the real executor across
+``--nodes`` devices (``--backend executor``).
+
 Examples:
   PYTHONPATH=src python -m repro.launch.train --paper-mlp \
       --neg-mode random --classifier goodness --epochs 60 --splits 10
   PYTHONPATH=src python -m repro.launch.train --arch tinyllama-1.1b \
       --steps 50 --batch 8 --seq 128
+  XLA_FLAGS=--xla_force_host_platform_device_count=4 \
+      PYTHONPATH=src python -m repro.launch.train --arch qwen2-0.5b \
+      --chapters 4 --backend executor --schedule single_layer --nodes 4
 """
 from __future__ import annotations
 
@@ -69,6 +77,35 @@ def run_paper_mlp(args):
     return res
 
 
+def run_lm_chapters(args, cfg):
+    """LM chapter schedule on real text (``--chapters N``): per-block
+    train tasks + a per-chapter head task, sequentially
+    (``--backend sequential``) or on the real executor across
+    ``--nodes`` devices (``--backend executor --schedule ...``) —
+    the ``api.fit`` invocation the README documents."""
+    tracer = getattr(args, "tracer", obs_trace.NOOP)
+    source = data_lib.text_source(vocab=cfg.vocab, seq_len=args.seq,
+                                  seed=args.seed)
+    t0 = time.time()
+    res = api.fit(cfg, source, backend=args.backend,
+                  schedule=args.schedule, num_nodes=args.nodes,
+                  chapters=args.chapters,
+                  steps_per_chapter=args.steps_per_chapter,
+                  batch=args.batch, seq=args.seq, lr=args.lr,
+                  head_lr=args.head_lr,
+                  trace=tracer if tracer.enabled else None)
+    wall = time.time() - t0
+    print(f"\n[{args.backend}] {res.schedule} N={res.num_nodes}: "
+          f"chapters={args.chapters} eval_ce={res.eval_ce:.4f} "
+          f"makespan={res.makespan:.2f}s wall={wall:.1f}s")
+    if args.ckpt:
+        checkpoint.save(args.ckpt, res.params,
+                        step=args.chapters * args.steps_per_chapter,
+                        tracer=tracer)
+        print("saved", args.ckpt)
+    return res.params
+
+
 def run_lm(args):
     tracer = getattr(args, "tracer", obs_trace.NOOP)
     cfg = get_config(args.arch)
@@ -77,6 +114,8 @@ def run_lm(args):
     if args.neg_mode:
         cfg = dataclasses.replace(
             cfg, ff=dataclasses.replace(cfg.ff, neg_mode=args.neg_mode))
+    if args.chapters:
+        return run_lm_chapters(args, cfg)
     key = jax.random.PRNGKey(args.seed)
     params = transformer.init(key, cfg)
     opt = optim.adam_init(params)
@@ -148,6 +187,16 @@ def main():
     ap.add_argument("--n-train", type=int, default=4032)
     ap.add_argument("--n-test", type=int, default=1000)
     ap.add_argument("--probe", type=int, default=0)
+    ap.add_argument("--chapters", type=int, default=0,
+                    help="--arch mode: run the LM CHAPTER schedule for "
+                         "this many chapters on the real-text BPE "
+                         "source (0 = the joint FF step on the "
+                         "synthetic corpus); combine with --backend "
+                         "sequential|executor and --schedule/--nodes")
+    ap.add_argument("--steps-per-chapter", type=int, default=8,
+                    help="per-task step budget of the chapter schedule")
+    ap.add_argument("--head-lr", type=float, default=None,
+                    help="chapter-head learning rate (default: --lr)")
     ap.add_argument("--steps", type=int, default=30)
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--seq", type=int, default=128)

@@ -1,6 +1,14 @@
 """Chapter-scheduled FF for transformers (the paper's schedule on the
-assigned archs): block-local steps must train only their block and the
-schedule must produce simulator-compatible records."""
+assigned archs): block-local steps must train only their block, the
+per-chapter head task must actually move the head weights, the schedule
+must produce simulator-compatible records, and the REAL executor must
+reproduce the sequential weight stream bit-exactly on the BPE text
+source (subprocess matrix — conftest keeps the in-process runner on one
+device)."""
+import os
+import subprocess
+import sys
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -10,6 +18,9 @@ from repro import data as data_lib, optim
 from repro.configs import get_config
 from repro.core import pff, pff_lm
 from repro.models import transformer
+
+_SRC = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                    os.pardir, "src")
 
 
 @pytest.fixture(scope="module")
@@ -83,7 +94,12 @@ def test_chapter_schedule_records_and_learning(setup):
     params, records, losses = pff_lm.train_chapters(
         cfg, data_iter, chapters=3, steps_per_chapter=3, lr=3e-3)
     repeat = cfg.groups[0][1]
-    assert len(records) == 3 * repeat
+    # per chapter: one train record per block + ONE head record
+    assert len(records) == 3 * (repeat + 1)
+    assert sum(r.kind == "head" for r in records) == 3
+    assert all(r.layer == repeat for r in records if r.kind == "head")
+    # losses (train-FF only — the head's CE lives on a different scale)
+    assert len(losses) == 3 * repeat
     # losses drop over chapters. Comparing two single (chapter, block)
     # samples is too noisy (block 0 flaked by ~0.025); compare the mean
     # loss of the last chapter against the first instead.
@@ -93,3 +109,67 @@ def test_chapter_schedule_records_and_learning(setup):
     # records drive the PFF simulator
     sim = pff.simulate_schedule(records, "all_layers", 2)
     assert sim.makespan > 0 and sim.speedup >= 1.0
+
+
+def test_chapter_head_actually_updates(setup):
+    """Regression: train_chapters used to build the head step but never
+    run it (the head_lr knob was dead and final_norm/the softmax weights
+    stayed at init). Every head parameter must move."""
+    cfg, params0, _ = setup
+
+    def data_iter(chapter, block):
+        return ({"tokens": jnp.asarray(t)} for t in
+                data_lib.lm_batches(cfg.vocab, 4, 32, 2,
+                                    seed=chapter * 97 + block))
+
+    params, _, _ = pff_lm.train_chapters(
+        cfg, data_iter, chapters=2, steps_per_chapter=2, lr=3e-3)
+    for name in pff_lm.head_param_names(cfg):
+        a = np.asarray(params0[name], np.float32)
+        b = np.asarray(params[name], np.float32)
+        assert not np.array_equal(a, b), f"head param {name!r} never " \
+            "updated — the per-chapter head task did not run"
+
+
+def test_text_source_bpe_round_trip_and_determinism():
+    """The real-text pipeline: BPE encode/decode is the identity on the
+    checked-in corpus, token blocks regenerate deterministically per
+    (seed, split) — the purity the executor's hand-off relies on (data
+    never crosses nodes) — and splits don't leak into each other."""
+    from repro.data import encoder as encoder_lib
+    enc = encoder_lib.default_encoder(512)
+    text = encoder_lib.corpus_text()
+    ids = enc.encode(text)
+    assert enc.decode(ids) == text
+    assert max(ids) < 512 and min(ids) >= 0
+    assert len(ids) < len(text)          # merges actually compress
+
+    src = data_lib.text_source(vocab=512, seq_len=16, seed=0)
+    a = src.blocks("train", 8, seed=3)
+    b = src.blocks("train", 8, seed=3)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert np.asarray(a).shape == (8, 17)     # seq_len + 1 (shift pair)
+    c = src.blocks("train", 8, seed=4)
+    assert not np.array_equal(np.asarray(a), np.asarray(c))
+    # val draws from the holdout tail — different region than train
+    v = src.blocks("val", 8, seed=3)
+    assert not np.array_equal(np.asarray(a), np.asarray(v))
+    # Source protocol adapter: (x = first seq_len tokens, y = next)
+    x, y = src.sample("train", 4, seed=1)
+    assert np.asarray(x).shape == (4, 16)
+    assert np.asarray(y).shape == (4,) and y.dtype == np.int32
+
+
+def test_lm_executor_bit_exact_matrix():
+    """The tentpole gate: pff_exec.LMExecutor on 4 faked devices must
+    reproduce train_chapters' weight stream bit-exactly on the BPE text
+    source for All-Layers AND Single-Layer (plus the overlap on/off
+    A-B). One subprocess sweeps repro.core.pff_exec._LM_MATRIX."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    env["PYTHONPATH"] = _SRC + os.pathsep + env.get("PYTHONPATH", "")
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.core.pff_exec", "--lm-matrix"],
+        capture_output=True, text=True, env=env, timeout=540)
+    assert r.returncode == 0, f"stdout:\n{r.stdout}\nstderr:\n{r.stderr}"
+    assert "executor chapter schedule bit-exact" in r.stdout
